@@ -1,0 +1,73 @@
+"""Roofline table from the dry-run sweep (results/dryrun_*.jsonl).
+
+Reads the recorded per-cell artifacts and prints the §Roofline table:
+three terms, bottleneck, MODEL_FLOPS/HLO_FLOPs, roofline fraction.
+Run ``python -m repro.launch.dryrun --all --out results/dryrun_single.jsonl``
+first (CI: the sweep takes ~1 h on one CPU core).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(name: str) -> List[dict]:
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        return []
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows
+
+
+def table(rows: List[dict]) -> str:
+    hdr = (
+        f"{'arch':<22} {'shape':<12} {'t_comp':>9} {'t_mem':>9} {'t_coll':>9} "
+        f"{'bound':<10} {'useful':>7} {'roofl%':>7} {'mem GB':>8}"
+    )
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        out.append(
+            f"{r['arch']:<22} {r['shape']:<12} {r['t_compute_s']:>9.4f} "
+            f"{r['t_memory_s']:>9.4f} {r['t_collective_s']:>9.4f} "
+            f"{r['bottleneck']:<10} {r['useful_flops_frac']:>7.3f} "
+            f"{100 * r['roofline_frac']:>6.1f}% {r['peak_mem_gb']:>8.2f}"
+        )
+    return "\n".join(out)
+
+
+def run_all():
+    single = load("dryrun_single.jsonl")
+    multi = load("dryrun_multipod.jsonl")
+    rows = []
+    rows.append(("roofline_cells_single_pod", 0.0, len(single)))
+    rows.append(("roofline_cells_multi_pod", 0.0, len(multi)))
+    if single:
+        worst = min(single, key=lambda r: r["roofline_frac"])
+        coll = max(single, key=lambda r: r["t_collective_s"])
+        rows.append(
+            ("worst_roofline_cell", 0.0,
+             f"{worst['arch']}/{worst['shape']}={worst['roofline_frac']}")
+        )
+        rows.append(
+            ("most_collective_bound", 0.0,
+             f"{coll['arch']}/{coll['shape']}={coll['t_collective_s']}s")
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    single = load("dryrun_single.jsonl")
+    print("=== single-pod (16x16) baseline roofline ===")
+    print(table(single))
+    multi = load("dryrun_multipod.jsonl")
+    print("\n=== multi-pod (2x16x16) compile check ===")
+    print(table(multi))

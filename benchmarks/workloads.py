@@ -1,0 +1,150 @@
+"""Synthetic notebook-corpus generator for the paper-figure benchmarks.
+
+The paper's corpora (Data 100, Github/history.sqlite) are not redistributable;
+we generate statistically matched workloads: per-notebook cell streams of
+dataframe programs whose interaction mix, operator chains and think times are
+tuned to the paper's reported statistics (Figs 3–6), then run *our own
+analyzer* over the resulting operator DAGs — reproducing the measurement, not
+hard-coding the answer.
+"""
+from __future__ import annotations
+
+import sys
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import ThinkTimeModel  # noqa: E402
+from repro.frame import Catalog, ColSpec, Session, TableSpec  # noqa: E402
+
+
+def make_catalog(seed: int = 0, nrows: int = 6_000) -> Catalog:
+    cat = Catalog()
+    for i, (name, io_s) in enumerate(
+        [("events", 6.0), ("users", 1.5), ("LARGE_LOG", 18.5)]
+    ):
+        cat.register(
+            TableSpec(
+                name,
+                nrows=nrows * (4 if name == "LARGE_LOG" else 1),
+                cols=(
+                    ColSpec("a", low=0, high=100),
+                    ColSpec("b", null_frac=0.2),
+                    ColSpec("c", null_frac=0.05),
+                    ColSpec("k", kind="cat", n_categories=12),
+                ),
+                io_seconds=io_s,
+                seed=seed + i,
+            )
+        )
+    return cat
+
+
+@dataclass
+class NotebookTrace:
+    """One synthetic notebook session, replayable against a Session."""
+
+    seed: int
+    n_cells: int
+    think_times: List[float]
+    # recorded ops per cell for sequence-model training
+    op_stream: List[str] = field(default_factory=list)
+
+
+INTERACTION_MIX = (
+    # (kind, weight) — head/tail fraction tuned to the paper's Fig 5
+    ("describe", 0.47),
+    ("head", 0.06),
+    ("tail", 0.01),
+    ("value_counts", 0.28),
+    ("columns", 0.12),
+    ("groupby_head", 0.06),
+)
+
+
+def run_notebook(
+    session: Session,
+    seed: int,
+    n_cells: int = 12,
+    think: Optional[ThinkTimeModel] = None,
+    think_scale: float = 1.0,
+    do_think: bool = True,
+) -> NotebookTrace:
+    """Drive one synthetic notebook through a Session (fluent API)."""
+    rng = np.random.default_rng(seed)
+    think = think or ThinkTimeModel()
+    frames: List = []
+    trace = NotebookTrace(seed=seed, n_cells=n_cells, think_times=[])
+
+    def new_frame():
+        name = ["events", "users", "LARGE_LOG"][rng.integers(0, 3)]
+        df = session.read_table(name)
+        frames.append(df)
+        trace.op_stream.append("read_table")
+        return df
+
+    new_frame()
+    for cell in range(n_cells):
+        # 1-2 specification ops (non-critical candidates)
+        if rng.random() < 0.15 or not frames:
+            new_frame()
+        fidx = int(rng.integers(0, len(frames)))
+        df = frames[fidx]
+        for _ in range(rng.integers(1, 3)):
+            roll = rng.random()
+            if roll < 0.30:
+                df = df[df["a"] > float(rng.uniform(0, 100))]
+                trace.op_stream.append("filter_cmp")
+            elif roll < 0.55:
+                df["z"] = df["a"] * float(rng.uniform(0.5, 2.0))
+                trace.op_stream.append("assign")
+            elif roll < 0.70:
+                df["b"] = df["b"].fillna(df["b"].mean())
+                trace.op_stream.append("fillna")
+            elif roll < 0.85:
+                df = df.dropna(subset=["c"])
+                trace.op_stream.append("dropna")
+            else:
+                new_frame()
+        frames[fidx] = df
+
+        # interaction at cell end (the paper: cells usually end in one)
+        kinds, weights = zip(*INTERACTION_MIX)
+        kind = kinds[rng.choice(len(kinds), p=np.array(weights) / sum(weights))]
+        if kind == "describe":
+            session.show(df.describe())
+        elif kind == "head":
+            session.show(df.head(int(rng.integers(3, 10))))
+        elif kind == "tail":
+            session.show(df.tail(5))
+        elif kind == "value_counts":
+            session.show(df["k"].value_counts())
+        elif kind == "columns":
+            session.show(df.columns)
+        elif kind == "groupby_head":
+            session.show(df.groupby("k").mean().head(5))
+        trace.op_stream.append(kind if kind != "groupby_head" else "head")
+
+        if do_think:
+            t = float(think.sample(rng)) * think_scale
+            trace.think_times.append(t)
+            session.think(t)
+    return trace
+
+
+def corpus(
+    n_notebooks: int,
+    catalog_seed: int = 0,
+    cells_per_nb: int = 12,
+    **session_kwargs,
+) -> List[Tuple[Session, NotebookTrace]]:
+    out = []
+    for i in range(n_notebooks):
+        cat = make_catalog(seed=catalog_seed)
+        s = Session(catalog=cat, mode="sim", **session_kwargs)
+        trace = run_notebook(s, seed=1000 + i, n_cells=cells_per_nb)
+        out.append((s, trace))
+    return out

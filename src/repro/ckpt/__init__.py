@@ -1,0 +1,2 @@
+"""repro.ckpt — async atomic checkpointing with elastic restore."""
+from .manager import CheckpointManager

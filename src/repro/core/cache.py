@@ -1,0 +1,165 @@
+"""Materialised-result cache with utility-based eviction (paper §4.3, §5.2).
+
+Eq 2:  p_i = 1 / (T + 1 - t_i)          (recency proxy for reuse probability)
+Eq 3:  O(r_i) = p_i * m_i / k_i         (paper: discard the lowest O)
+
+The paper's Eq 3 as written discards *small, expensive-to-recompute* results
+first, which is internally inconsistent with its own prose; we implement it
+verbatim as policy ``"paper_eq3"`` and additionally ship the corrected
+GreedyDual-Size-style policy ``"corrected"`` that discards the result with the
+lowest  p_i * k_i / m_i  (low reuse probability, cheap to recompute, large).
+``benchmarks/bench_cache.py`` ablates both against LRU and size-only.
+
+GC triggers when memory consumption exceeds ``gc_threshold`` (paper: 80%) of
+the budget; eviction continues until back under the threshold.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, Optional
+
+from .costmodel import CostModel
+from .dag import Node
+
+EvictionPolicy = str  # "paper_eq3" | "corrected" | "lru" | "size"
+
+
+def result_nbytes(value: Any) -> int:
+    """Best-effort memory footprint of a materialised result."""
+    nb = getattr(value, "nbytes", None)
+    if nb is not None:
+        return int(nb)
+    if isinstance(value, (int, float, bool)):
+        return 8
+    if isinstance(value, str):
+        return len(value)
+    if isinstance(value, (list, tuple)):
+        return sum(result_nbytes(v) for v in value) + 8 * len(value)
+    if isinstance(value, dict):
+        return sum(result_nbytes(v) + len(str(k)) for k, v in value.items())
+    return 64
+
+
+@dataclass
+class CacheEntry:
+    node: Node
+    value: Any
+    m_bytes: int
+    t_last_use: int
+    pinned: int = 0
+    speculative: bool = False
+
+
+@dataclass
+class MaterializedCache:
+    budget_bytes: int
+    cost_model: CostModel
+    policy: EvictionPolicy = "corrected"
+    gc_threshold: float = 0.8  # paper §4.3
+    on_evict: Optional[Callable[[Node], None]] = None
+
+    _entries: Dict[int, CacheEntry] = field(default_factory=dict)
+    _T: int = 0  # paper's global reuse counter
+    used_bytes: int = 0
+    n_evictions: int = 0
+    n_hits: int = 0
+    n_misses: int = 0
+
+    # -- basic ops -----------------------------------------------------------------
+    def __contains__(self, nid: int) -> bool:
+        return nid in self._entries
+
+    def executed_ids(self) -> set[int]:
+        return set(self._entries)
+
+    def get(self, node: Node) -> Any:
+        entry = self._entries.get(node.nid)
+        if entry is None:
+            self.n_misses += 1
+            raise KeyError(node.nid)
+        self.n_hits += 1
+        self._T += 1  # paper: increment T on each reuse
+        entry.t_last_use = self._T
+        return entry.value
+
+    def peek(self, nid: int) -> Optional[Any]:
+        e = self._entries.get(nid)
+        return None if e is None else e.value
+
+    def put(self, node: Node, value: Any, speculative: bool = False) -> None:
+        m = result_nbytes(value)
+        old = self._entries.pop(node.nid, None)
+        if old is not None:
+            self.used_bytes -= old.m_bytes
+        self._entries[node.nid] = CacheEntry(
+            node=node, value=value, m_bytes=m, t_last_use=self._T,
+            speculative=speculative,
+        )
+        self.used_bytes += m
+        self.maybe_gc()
+
+    def drop(self, nid: int) -> None:
+        e = self._entries.pop(nid, None)
+        if e is not None:
+            self.used_bytes -= e.m_bytes
+            if self.on_evict is not None:
+                self.on_evict(e.node)
+
+    def pin(self, nid: int) -> None:
+        if nid in self._entries:
+            self._entries[nid].pinned += 1
+
+    def unpin(self, nid: int) -> None:
+        if nid in self._entries and self._entries[nid].pinned > 0:
+            self._entries[nid].pinned -= 1
+
+    # -- eviction ---------------------------------------------------------------------
+    def _p(self, entry: CacheEntry) -> float:
+        return 1.0 / (self._T + 1 - entry.t_last_use)  # Eq 2
+
+    def _score(self, entry: CacheEntry) -> float:
+        """Lower score = evicted first."""
+        p = self._p(entry)
+        m = max(entry.m_bytes, 1)
+        k = max(
+            self.cost_model.recompute_cost(entry.node, self.executed_ids()), 1e-9
+        )
+        if self.policy == "paper_eq3":
+            return p * m / k  # Eq 3 verbatim: discard lowest O
+        if self.policy == "corrected":
+            return p * k / m  # GreedyDual-Size: keep high-p, costly, small
+        if self.policy == "lru":
+            return float(entry.t_last_use)
+        if self.policy == "size":
+            return -float(m)  # discard largest
+        raise ValueError(f"unknown eviction policy {self.policy!r}")
+
+    def maybe_gc(self) -> int:
+        """Evict until under gc_threshold * budget. Returns #evictions."""
+        limit = self.gc_threshold * self.budget_bytes
+        if self.used_bytes <= limit:
+            return 0
+        evicted = 0
+        # speculative results go before user-program results at equal score
+        while self.used_bytes > limit:
+            candidates = [e for e in self._entries.values() if e.pinned == 0]
+            if not candidates:
+                break
+            victim = min(
+                candidates, key=lambda e: (not e.speculative, self._score(e))
+            )
+            self.drop(victim.node.nid)
+            evicted += 1
+            self.n_evictions += 1
+        return evicted
+
+    # -- stats ---------------------------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._entries),
+            "used_bytes": self.used_bytes,
+            "budget_bytes": self.budget_bytes,
+            "hits": self.n_hits,
+            "misses": self.n_misses,
+            "evictions": self.n_evictions,
+        }

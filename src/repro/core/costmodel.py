@@ -1,0 +1,132 @@
+"""Operator cost model with online calibration (paper §4.1, §5.2).
+
+The paper augments the operator DAG with runtime statistics as cells execute;
+we keep per-op-class throughputs (seconds/row) updated by an EWMA of observed
+executions, plus row-count estimation rules so unexecuted operators get cost
+estimates (needed by the scheduler's delivery costs and the cache's
+recomputation costs).
+
+Costs are *simulated-seconds* in simulation mode (driven by synthetic
+``io_seconds``-style annotations) and wall-seconds in real mode — the model is
+agnostic, it just learns from whatever ``observe`` feeds it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Optional
+
+from .dag import DAG, Node
+
+# Default per-row costs (seconds/row) before any calibration.  These only
+# matter until the first observation of each op class; magnitudes are from
+# single-core columnar throughputs (~1e8 rows/s scans, slower UDF/sorts).
+DEFAULT_UNIT_COST: Dict[str, float] = {
+    "read_table": 2e-7,
+    "apply": 1e-6,
+    "sort_values": 5e-7,
+    "groupby_agg": 4e-7,
+    "join": 5e-7,
+    "describe": 2e-7,
+    "value_counts": 2e-7,
+}
+FALLBACK_UNIT_COST = 1e-7
+MIN_COST = 1e-6  # floor so zero-row ops still cost something to schedule
+
+# Row estimators: est rows of node given parent rows.
+_SELECTIVITY_DEFAULT = 0.5
+_GROUP_FRACTION_DEFAULT = 0.01
+
+
+def _est_rows(node: Node) -> float:
+    if node.est_rows is not None:
+        return float(node.est_rows)
+    parent_rows = [(_est_rows(p)) for p in node.parents] or [0.0]
+    top = max(parent_rows)
+    op = node.op
+    if op in ("filter", "filter_cmp", "isin", "between", "dropna"):
+        return top * _SELECTIVITY_DEFAULT
+    if op in ("head", "tail"):
+        k = node.literals[0] if node.literals else 5
+        return float(min(top, k))
+    if op in ("groupby_agg", "value_counts", "unique"):
+        return max(1.0, top * _GROUP_FRACTION_DEFAULT)
+    if op in ("describe", "mean", "sum", "count", "min", "max", "std", "columns"):
+        return 1.0
+    return top
+
+
+@dataclass
+class _OpStats:
+    unit_cost: float
+    n_obs: int = 0
+
+
+@dataclass
+class CostModel:
+    """Per-op-class EWMA throughput model."""
+
+    ewma_alpha: float = 0.3
+    _stats: Dict[str, _OpStats] = field(default_factory=dict)
+
+    # -- estimation ------------------------------------------------------------
+    def unit_cost(self, op: str) -> float:
+        st = self._stats.get(op)
+        if st is not None:
+            return st.unit_cost
+        return DEFAULT_UNIT_COST.get(op, FALLBACK_UNIT_COST)
+
+    def est_rows(self, node: Node) -> float:
+        return _est_rows(node)
+
+    def cost(self, node: Node) -> float:
+        """Estimated cost (seconds) of executing ``node`` alone, inputs ready.
+
+        Explicit per-node cost annotations (synthetic workloads, simulated IO)
+        take precedence: ``node.kwargs['cost_s']``.
+        """
+        explicit = node.kwargs.get("cost_s")
+        if explicit is not None:
+            return float(explicit)
+        # work is driven by the larger of input/output rows
+        rows = max([_est_rows(node)] + [_est_rows(p) for p in node.parents])
+        return max(MIN_COST, rows * self.unit_cost(node.op))
+
+    # -- delivery cost (paper §5.2) --------------------------------------------
+    def delivery_cost(self, node: Node, executed: Iterable[int]) -> float:
+        """Cost of executing ``node`` along with all unexecuted predecessors;
+        zero if already executed (paper's c_j)."""
+        done = set(executed)
+        if node.nid in done:
+            return 0.0
+        total = 0.0
+        seen: set[int] = set()
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            if n.nid in seen or n.nid in done:
+                continue
+            seen.add(n.nid)
+            total += self.cost(n)
+            stack.extend(n.parents)
+        return total
+
+    def recompute_cost(self, node: Node, cached: Iterable[int]) -> float:
+        """Paper's k_i: recomputation cost of a materialised result, reusing
+        other materialised results (never recompute from scratch if ancestors
+        are cached)."""
+        cached_set = set(cached) - {node.nid}
+        return self.delivery_cost(node, cached_set)
+
+    # -- calibration -----------------------------------------------------------
+    def observe(self, node: Node, seconds: float, rows: Optional[float] = None) -> None:
+        rows = rows if rows is not None else max(
+            [_est_rows(node)] + [_est_rows(p) for p in node.parents]
+        )
+        rows = max(rows, 1.0)
+        per_row = seconds / rows
+        st = self._stats.get(node.op)
+        if st is None:
+            self._stats[node.op] = _OpStats(unit_cost=per_row, n_obs=1)
+        else:
+            st.unit_cost = (1 - self.ewma_alpha) * st.unit_cost + self.ewma_alpha * per_row
+            st.n_obs += 1

@@ -1,0 +1,54 @@
+"""Common-subexpression elimination over the operator DAG (paper §4.2).
+
+The paper's procedure: start at root nodes, traverse breadth-first, merging
+any descendants with identical code; proceed level by level until the leaves.
+Operators are assumed idempotent, so nodes with identical (op, literals,
+merged-parents) compute identical results.
+
+``DAG.add`` already hash-conses, so graphs built through the fluent API are
+CSE'd incrementally; this explicit pass exists for externally constructed
+graphs and as the paper-faithful reference implementation (tested equivalent
+to hash consing in ``tests/test_core_dag.py``).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict
+
+from .dag import DAG, Node
+
+
+def merge_common_subexpressions(dag: DAG) -> Dict[int, int]:
+    """BFS merge of structurally identical nodes.
+
+    Returns a mapping ``{merged_away_nid: surviving_nid}``.
+    """
+    merged: Dict[int, int] = {}
+    frontier = deque(dag.roots())
+    visited: set[int] = set()
+    canonical: Dict[str, Node] = {}
+
+    while frontier:
+        node = frontier.popleft()
+        if node.nid in visited or node.nid in merged:
+            continue
+        visited.add(node.nid)
+        fp = node.fingerprint
+        survivor = canonical.get(fp)
+        if survivor is None or survivor.nid == node.nid:
+            canonical[fp] = node
+            survivor = node
+        else:
+            dag.replace_node(node, survivor)
+            merged[node.nid] = survivor.nid
+            node = survivor
+        for child in dag.children(node):
+            frontier.append(child)
+    return merged
+
+
+def resolve(merged: Dict[int, int], nid: int) -> int:
+    """Follow merge chains to the surviving node id."""
+    while nid in merged:
+        nid = merged[nid]
+    return nid

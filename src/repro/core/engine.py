@@ -1,0 +1,507 @@
+"""Opportunistic evaluation engine (paper §4, §5) — the framework's core.
+
+Ties together the operator DAG, critical-path slicing, the think-time
+scheduler, the materialised-result cache, speculation, and preemptible
+partition-granular execution:
+
+* ``add``        — extend the DAG (hash-consed; specification only, no work)
+* ``display``    — an *interaction*: preempt background work, execute only the
+                   interaction critical path (with the head/tail partial-result
+                   fast path), record latency
+* ``think``      — (simulation) let virtual think time elapse; the scheduler
+                   opportunistically executes non-critical operators until the
+                   budget is exhausted (mid-partition progress is lost, completed
+                   partitions are kept)
+* ``start_background`` / ``stop_background`` — (real mode) a daemon worker doing
+                   the same against wall time, preempted by ``display``
+
+Two engines per process are fine; state is fully instance-local.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from .cache import EvictionPolicy, MaterializedCache
+from .clock import Clock, RealClock, VirtualClock
+from .costmodel import CostModel
+from .dag import DAG, Node
+from .executor import (
+    Executor,
+    OpRuntime,
+    PartialProgress,
+    Preempted,
+    Registry,
+)
+from .predictor import InteractionPredictor
+from .scheduler import Policy, Scheduler
+from .slicing import critical_path, unexecuted_critical
+from .speculation import SpeculationManager
+from .thinktime import ThinkTimeModel
+
+
+@dataclass
+class InteractionRecord:
+    label: str
+    latency_s: float
+    ops_executed: int
+    partial: bool  # served via the head/tail partial-result path
+    at: float
+
+
+@dataclass
+class Metrics:
+    interactions: List[InteractionRecord] = field(default_factory=list)
+    sync_wait_s: float = 0.0
+    think_s: float = 0.0
+    background_busy_s: float = 0.0
+
+    def summary(self) -> dict:
+        return {
+            "n_interactions": len(self.interactions),
+            "sync_wait_s": round(self.sync_wait_s, 6),
+            "think_s": round(self.think_s, 6),
+            "background_busy_s": round(self.background_busy_s, 6),
+            "mean_latency_s": round(
+                sum(r.latency_s for r in self.interactions)
+                / max(1, len(self.interactions)),
+                6,
+            ),
+        }
+
+
+class Engine:
+    def __init__(
+        self,
+        budget_bytes: int = 2 << 30,
+        mode: str = "sim",  # "sim" (virtual clock) | "real"
+        policy: Policy = "utility",
+        cache_policy: EvictionPolicy = "corrected",
+        opportunistic: bool = True,  # False = eager baseline (paper's status quo)
+        partial_results: bool = True,  # head/tail partial-result fast path
+        speculation: bool = True,
+        predictor: Optional[InteractionPredictor] = None,
+        seed: int = 0,
+    ):
+        self.dag = DAG()
+        self.cost_model = CostModel()
+        self.clock: Clock = VirtualClock() if mode == "sim" else RealClock()
+        self.mode = mode
+        self.opportunistic = opportunistic
+        self.partial_results = partial_results
+        self.registry = Registry()
+        self.cache = MaterializedCache(
+            budget_bytes=budget_bytes,
+            cost_model=self.cost_model,
+            policy=cache_policy,
+        )
+        self.think_time = ThinkTimeModel()
+        self.predictor = predictor
+        self.speculation = SpeculationManager(
+            dag=self.dag,
+            cache=self.cache,
+            cost_model=self.cost_model,
+            think_time=self.think_time,
+            enabled=speculation,
+        )
+        self.scheduler = Scheduler(
+            dag=self.dag,
+            cost_model=self.cost_model,
+            predictor=predictor,
+            policy=policy,
+            seed=seed,
+            extra_utility=self.speculation.boost_for,
+        )
+        self.executor = Executor(self.registry, self.clock, self.cost_model)
+        self.partials: Dict[int, PartialProgress] = {}
+        self.speculation.partials = self.partials
+        self.cache.on_evict = lambda node: self.scheduler.evicted_once.add(node.nid)
+        self.metrics = Metrics()
+        self._lock = threading.RLock()
+        self._last_op: Optional[str] = None
+        self._last_output_at: Optional[float] = None
+        # real-mode background worker
+        self._worker: Optional[_BackgroundWorker] = None
+
+    # ------------------------------------------------------------------ DAG --
+    def add(
+        self,
+        op: str,
+        parents: Sequence[Node] = (),
+        literals: Sequence[Any] = (),
+        kwargs: Optional[dict] = None,
+        interaction: bool = False,
+        est_rows: Optional[float] = None,
+    ) -> Node:
+        with self._lock:
+            before = len(self.dag)
+            node = self.dag.add(
+                op, parents, literals, kwargs, interaction=interaction,
+                est_rows=est_rows,
+            )
+            if len(self.dag) > before:  # genuinely new (not CSE-merged)
+                if self.predictor is not None and self._last_op is not None:
+                    self.predictor.observe_transition(self._last_op, op)
+                self._last_op = op
+                self.speculation.on_node_submitted(node)
+            return node
+
+    def register_op(self, op: str, impl: OpRuntime) -> None:
+        self.registry.register(op, impl)
+
+    # ----------------------------------------------------------- materialise --
+    def value_of(self, node: Node) -> Any:
+        """Materialise a node synchronously (no preemption)."""
+        with self._lock:
+            return self._ensure(node)
+
+    def _ensure(self, node: Node, budget_s: Optional[float] = None) -> Any:
+        if node.nid in self.cache:
+            return self.cache.get(node)
+        impl = self.registry[node.op]
+        inputs = []
+        pinned = []
+        try:
+            if impl.needs_inputs:
+                for p in node.parents:
+                    inputs.append(self._ensure(p))
+                    self.cache.pin(p.nid)
+                    pinned.append(p.nid)
+            value = self.executor.execute(
+                node, inputs, self.partials, budget_s=budget_s
+            )
+            self.cache.put(node, value)
+            self._record_rows(node, value)
+            return value
+        finally:
+            for nid in pinned:
+                self.cache.unpin(nid)
+
+    @staticmethod
+    def _record_rows(node: Node, value: Any) -> None:
+        nrows = getattr(value, "nrows", None)
+        if nrows is not None:
+            node.est_rows = float(nrows)
+
+    # ------------------------------------------------------------ interaction --
+    def display(self, node: Node) -> Any:
+        """Execute an interaction: critical path only, everything else deferred."""
+        node.is_interaction = True
+        self._pause_worker()
+        try:
+            with self._lock:
+                # record think time since previous output
+                now = self.clock.now()
+                if self._last_output_at is not None:
+                    dt = now - self._last_output_at
+                    if dt > 0:
+                        self.think_time.update(dt)
+                        self.metrics.think_s += dt
+
+                t0 = self.clock.now()
+                n_exec_before = self.executor.stats.nodes_completed
+                partial = False
+                if not self.opportunistic:
+                    # eager baseline: execute *everything specified so far*
+                    # (the paper's status-quo semantics)
+                    for n in self.dag.topological():
+                        if n.nid <= node.nid and n.nid not in self.cache:
+                            self._ensure(n)
+                    value = self.cache.get(node)
+                else:
+                    value = None
+                    if self.partial_results:
+                        impl = (
+                            self.registry[node.op]
+                            if node.op in self.registry
+                            else None
+                        )
+                        if impl is not None and impl.fast_interaction is not None:
+                            value = impl.fast_interaction(node)
+                            if value is not None:
+                                self.cache.put(node, value)
+                        if value is None:
+                            value = self._try_partial_headtail(node)
+                        partial = value is not None
+                    if value is None:
+                        value = self._ensure(node)
+                latency = self.clock.now() - t0
+                self.metrics.sync_wait_s += latency
+                self.metrics.interactions.append(
+                    InteractionRecord(
+                        label=node.label,
+                        latency_s=latency,
+                        ops_executed=self.executor.stats.nodes_completed
+                        - n_exec_before,
+                        partial=partial,
+                        at=self.clock.now(),
+                    )
+                )
+                self.speculation.on_critical_path_executed(
+                    critical_path(self.dag, node)
+                )
+                self._last_output_at = self.clock.now()
+                return value
+        finally:
+            self._resume_worker()
+
+    # ---- head/tail partial results (paper §2.2.2, §5.1) ----------------------
+    def _try_partial_headtail(self, node: Node) -> Optional[Any]:
+        if node.op not in ("head", "tail") or not node.parents:
+            return None
+        k = int(node.literals[0]) if node.literals else 5
+        from_back = node.op == "tail"
+
+        # walk up through partition-wise ops to a materialised (or source) base
+        chain: List[Node] = []
+        cur = node.parents[0]
+        base_parts: Optional[List[Any]] = None
+        nparts: Optional[int] = None
+        source: Optional[Node] = None
+        while True:
+            if cur.nid in self.cache:
+                base_value = self.cache.get(cur)
+                parts = getattr(base_value, "partitions", None)
+                if parts is None:
+                    return None
+                base_parts = list(parts)
+                nparts = len(base_parts)
+                break
+            impl = self.registry[cur.op] if cur.op in self.registry else None
+            if impl is None:
+                return None
+            if impl.partitionwise and cur.parents and impl.apply_partition:
+                # non-frame parents (scalar subexpressions) must already be
+                # materialised for the partial path to proceed
+                if any(p.nid not in self.cache for p in cur.parents[1:]):
+                    return None
+                chain.append(cur)
+                cur = cur.parents[0]
+                continue
+            if impl.source_partitioned and impl.gen_partition and impl.n_partitions:
+                source = cur
+                nparts = impl.n_partitions(cur)
+                break
+            return None  # blocking operator in the way → full materialisation
+        chain.reverse()  # base-first application order
+
+        order = range(nparts - 1, -1, -1) if from_back else range(nparts)
+        gathered: List[Any] = []
+        rows = 0
+        for j in order:
+            part = self._chain_partition(source, base_parts, chain, j)
+            gathered.append(part)
+            rows += int(getattr(part, "nrows", 0))
+            if rows >= k:
+                break
+        if from_back:
+            gathered.reverse()
+        combiner = self.registry[node.op]
+        value = combiner.combine(node, [_FakeParts(gathered)], [])
+        self.cache.put(node, value)
+        return value
+
+    def _chain_partition(
+        self,
+        source: Optional[Node],
+        base_parts: Optional[List[Any]],
+        chain: List[Node],
+        j: int,
+    ) -> Any:
+        """Partition j pushed through the partition-wise chain, memoised in
+        ``self.partials`` so background completion resumes without recompute."""
+        if base_parts is not None:
+            part = base_parts[j]
+        else:
+            impl = self.registry[source.op]
+            prog = self.partials.setdefault(
+                source.nid, PartialProgress(total_units=impl.n_partitions(source))
+            )
+            if j in prog.results:
+                part = prog.results[j]
+            else:
+                part = impl.gen_partition(source, j)
+                cost = (
+                    impl.partition_cost(source, j) if impl.partition_cost else 0.0
+                )
+                self.clock.advance(cost)
+                prog.results[j] = part
+                self.executor.stats.units_run += 1
+        for op_node in chain:
+            impl = self.registry[op_node.op]
+            prog = self.partials.setdefault(
+                op_node.nid,
+                PartialProgress(
+                    total_units=len(base_parts)
+                    if base_parts is not None
+                    else self.partials[source.nid].total_units
+                ),
+            )
+            if j in prog.results:
+                part = prog.results[j]
+            else:
+                cost = (
+                    impl.partition_cost(op_node, j) if impl.partition_cost else 0.0
+                )
+                extras = [self.cache.get(p) for p in op_node.parents[1:]]
+                part = impl.apply_partition(op_node, part, extras)
+                self.clock.advance(cost)
+                prog.results[j] = part
+                self.executor.stats.units_run += 1
+        return part
+
+    # --------------------------------------------------------------- think time --
+    def think(self, seconds: float) -> dict:
+        """Simulation: user thinks for ``seconds`` of virtual time while the
+        scheduler opportunistically executes non-critical operators."""
+        assert self.clock.virtual, "think() is for simulation mode; use start_background() in real mode"
+        with self._lock:
+            t_start = self.clock.now()
+            deadline = t_start + seconds
+            executed_any = True
+            while self.opportunistic and executed_any:
+                remaining = deadline - self.clock.now()
+                if remaining <= 0:
+                    break
+                node = self.scheduler.pick(self.cache.executed_ids())
+                if node is None:
+                    break
+                impl = self.registry[node.op]
+                inputs = (
+                    [self.cache.get(p) for p in node.parents]
+                    if impl.needs_inputs
+                    else []
+                )
+                try:
+                    value = self.executor.execute(
+                        node, inputs, self.partials, budget_s=remaining
+                    )
+                    self.cache.put(node, value)
+                    self._record_rows(node, value)
+                except Preempted:
+                    break  # budget exhausted mid-unit; progress checkpointed
+            busy = self.clock.now() - t_start
+            self.metrics.background_busy_s += busy
+            if self.clock.now() < deadline:  # idle remainder of think time
+                self.clock.advance(deadline - self.clock.now())
+            return {"busy_s": busy, "idle_s": seconds - busy}
+
+    def drain_background(self) -> int:
+        """Run all remaining non-critical work to completion (no budget)."""
+        n = 0
+        with self._lock:
+            while True:
+                node = self.scheduler.pick(self.cache.executed_ids())
+                if node is None:
+                    return n
+                impl = self.registry[node.op]
+                inputs = (
+                    [self.cache.get(p) for p in node.parents]
+                    if impl.needs_inputs
+                    else []
+                )
+                value = self.executor.execute(node, inputs, self.partials)
+                self.cache.put(node, value)
+                self._record_rows(node, value)
+                n += 1
+
+    # ------------------------------------------------------- real-mode worker --
+    def start_background(self) -> None:
+        assert self.mode == "real"
+        if self._worker is None:
+            self._worker = _BackgroundWorker(self)
+            self._worker.start()
+
+    def stop_background(self) -> None:
+        if self._worker is not None:
+            self._worker.stop()
+            self._worker = None
+
+    def _pause_worker(self) -> None:
+        if self._worker is not None:
+            self._worker.pause()
+
+    def _resume_worker(self) -> None:
+        if self._worker is not None:
+            self._worker.resume()
+
+    def nudge_background(self) -> None:
+        if self._worker is not None:
+            self._worker.nudge()
+
+
+class _FakeParts:
+    """Minimal parent stand-in for head/tail combine over gathered partitions."""
+
+    def __init__(self, partitions):
+        self.partitions = partitions
+
+
+class _BackgroundWorker:
+    """Real-mode daemon thread running the think-time scheduler loop,
+    preempted between partition units (paper §4.3)."""
+
+    def __init__(self, engine: Engine):
+        self.engine = engine
+        self._pause_req = threading.Event()
+        self._paused = threading.Event()
+        self._stop = threading.Event()
+        self._work = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def start(self) -> None:
+        self._work.set()
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._pause_req.set()
+        self._work.set()
+        self._thread.join(timeout=10)
+
+    def pause(self) -> None:
+        self._pause_req.set()
+        # wait until the worker acknowledges (bounded: one unit duration)
+        self._paused.wait(timeout=60)
+
+    def resume(self) -> None:
+        self._pause_req.clear()
+        self._paused.clear()
+        self._work.set()
+
+    def nudge(self) -> None:
+        self._work.set()
+
+    def _run(self) -> None:
+        eng = self.engine
+        while not self._stop.is_set():
+            if self._pause_req.is_set():
+                self._paused.set()
+                self._work.clear()
+                self._work.wait(timeout=0.5)
+                continue
+            with eng._lock:
+                node = eng.scheduler.pick(eng.cache.executed_ids())
+            if node is None:
+                self._paused.set()
+                self._work.clear()
+                self._work.wait(timeout=0.05)
+                self._paused.clear()
+                continue
+            try:
+                with eng._lock:
+                    inputs = [eng.cache.get(p) for p in node.parents]
+                value = eng.executor.execute(
+                    node,
+                    inputs,
+                    eng.partials,
+                    preempt_check=self._pause_req.is_set,
+                )
+                with eng._lock:
+                    eng.cache.put(node, value)
+                    eng.metrics.background_busy_s += 0.0
+            except Preempted:
+                continue
+            except KeyError:
+                continue  # input evicted between pick and fetch; re-pick

@@ -1,0 +1,185 @@
+"""Preemptible operator execution at partition granularity (paper §5.1).
+
+pandas' lower-level BLAS calls cannot be interrupted; neither can an XLA
+executable once dispatched.  The paper's answer is *dataframe partitioning*:
+background work is decomposed into per-partition work units so that preemption
+loses at most the current partition's progress.  Completed units are
+checkpointed in :class:`PartialProgress` (a sparse ``{unit_index: result}``
+map — the head/tail partial-result path fills units from the front/back) and
+execution resumes from the first missing unit during the next think-time
+window — preemption never wastes completed-partition work.
+
+Operator semantics are supplied by an :class:`OpRuntime` registry (the frame
+layer registers dataframe operators; the serving layer registers decode /
+prefill steps).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+
+class Preempted(Exception):
+    """Raised when background execution yields to an interaction."""
+
+
+@dataclass
+class Unit:
+    """One preemption quantum (usually: one partition of one operator)."""
+
+    fn: Callable[[], Any]
+    cost_s: float = 0.0  # simulated duration; real mode measures instead
+    tag: str = ""
+
+
+@dataclass
+class OpRuntime:
+    """Executable semantics of one operator class."""
+
+    # build the full unit list given materialised parent values
+    units: Callable[["Node", Sequence[Any]], List[Unit]]
+    # combine(node, inputs, ordered_unit_results) -> final value
+    combine: Callable[["Node", Sequence[Any], List[Any]], Any]
+    # True if unit i consumes exactly partition i of the (single, first) frame
+    # parent and emits partition i of the output — enables head/tail partial
+    # results (paper §2.2.2).  Such ops must also provide apply_partition.
+    partitionwise: bool = False
+    # partitionwise fast path: apply_partition(node, partition, extras) where
+    # extras are the materialised values of node.parents[1:]
+    apply_partition: Optional[Callable[["Node", Any, Sequence[Any]], Any]] = None
+    # source ops (no frame parents) generating independent partitions:
+    # gen_partition(node, i) -> partition ; n_partitions(node) -> int
+    source_partitioned: bool = False
+    gen_partition: Optional[Callable[["Node", int], Any]] = None
+    n_partitions: Optional[Callable[["Node"], int]] = None
+    # per-partition simulated cost (for the partial path)
+    partition_cost: Optional[Callable[["Node", int], float]] = None
+    # cost (sim-seconds) of the combine phase, charged before combine runs
+    combine_cost: Optional[Callable[["Node", Sequence[Any]], float]] = None
+    # False for metadata-only ops (e.g. ``columns``) that must not force
+    # materialisation of their parents
+    needs_inputs: bool = True
+    # optional interaction fast path (physical rewrites like the paper's
+    # Fig. 2b group-head pushdown); returns None to fall through
+    fast_interaction: Optional[Callable[["Node"], Optional[Any]]] = None
+
+
+@dataclass
+class PartialProgress:
+    """Per-node resumable progress: sparse map of completed unit results."""
+
+    results: Dict[int, Any] = field(default_factory=dict)
+    total_units: Optional[int] = None
+
+    def missing(self) -> List[int]:
+        if self.total_units is None:
+            return []
+        return [i for i in range(self.total_units) if i not in self.results]
+
+    @property
+    def done(self) -> bool:
+        return self.total_units is not None and len(self.results) == self.total_units
+
+    def ordered(self) -> List[Any]:
+        assert self.done
+        return [self.results[i] for i in range(self.total_units)]
+
+
+class Registry:
+    def __init__(self) -> None:
+        self._impls: Dict[str, OpRuntime] = {}
+
+    def register(self, op: str, impl: OpRuntime) -> None:
+        self._impls[op] = impl
+
+    def __getitem__(self, op: str) -> OpRuntime:
+        try:
+            return self._impls[op]
+        except KeyError:
+            raise KeyError(
+                f"no runtime registered for operator {op!r}; "
+                "did the frame/serve layer initialise its registry?"
+            ) from None
+
+    def __contains__(self, op: str) -> bool:
+        return op in self._impls
+
+
+@dataclass
+class ExecStats:
+    units_run: int = 0
+    units_preempted_lost: int = 0
+    nodes_completed: int = 0
+    seconds: float = 0.0
+
+
+class Executor:
+    """Runs one node's units with preemption + resume.
+
+    The clock decides accounting: virtual clocks advance by ``unit.cost_s``;
+    real clocks measure wall time.  Either way the cost model is calibrated
+    with the observed duration.
+    """
+
+    def __init__(self, registry: Registry, clock, cost_model):
+        self.registry = registry
+        self.clock = clock
+        self.cost_model = cost_model
+        self.stats = ExecStats()
+
+    def execute(
+        self,
+        node,
+        inputs: Sequence[Any],
+        partials: Dict[int, PartialProgress],
+        preempt_check: Optional[Callable[[], bool]] = None,
+        budget_s: Optional[float] = None,
+    ) -> Any:
+        """Execute ``node``; raises :class:`Preempted` if interrupted.
+
+        ``budget_s`` (virtual clocks only): stop when the simulated duration of
+        the *next* unit would exceed the remaining budget — models an
+        interaction arriving during that unit, whose progress would be lost.
+        """
+        impl = self.registry[node.op]
+        units = impl.units(node, inputs)
+        prog = partials.get(node.nid)
+        if prog is None or prog.total_units != len(units):
+            prog = PartialProgress(total_units=len(units))
+            partials[node.nid] = prog
+
+        started = self.clock.now()
+        spent = 0.0
+        for i in range(len(units)):
+            if i in prog.results:
+                continue
+            unit = units[i]
+            if preempt_check is not None and preempt_check():
+                raise Preempted(node.label)
+            if budget_s is not None and self.clock.virtual:
+                if spent + unit.cost_s > budget_s + 1e-12:
+                    # unit would straddle the interaction arrival: its progress
+                    # is lost (paper's worst case = one partition)
+                    self.stats.units_preempted_lost += 1
+                    raise Preempted(node.label)
+            t0 = time.monotonic()
+            result = unit.fn()
+            wall = time.monotonic() - t0
+            dur = unit.cost_s if self.clock.virtual else wall
+            self.clock.advance(unit.cost_s)
+            spent += dur
+            prog.results[i] = result
+            self.stats.units_run += 1
+
+        if impl.combine_cost is not None:
+            c = impl.combine_cost(node, inputs)
+            self.clock.advance(c)
+            spent += c if self.clock.virtual else 0.0
+        value = impl.combine(node, inputs, prog.ordered())
+        total = (self.clock.now() - started) if self.clock.virtual else spent
+        self.cost_model.observe(node, max(total, 1e-9))
+        self.stats.seconds += total
+        self.stats.nodes_completed += 1
+        partials.pop(node.nid, None)
+        return value

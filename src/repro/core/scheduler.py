@@ -1,0 +1,101 @@
+"""Non-critical operator scheduling (paper §5.2, Eqs. 1 and 4).
+
+The scheduler chooses which *source operator* (unexecuted, all predecessors
+executed) to run next during think time.  Paper policy: maximize
+
+    U(s_i)   = sum_{j in D_i} c_j                 (Eq 1)
+    U_p(s_i) = sum_{j in D_i} c_j * p_j           (Eq 4)
+
+where D_i is the source operator plus all of its successors, c_j is the
+delivery cost (cost of j plus all unexecuted predecessors; 0 if executed) and
+p_j the predicted probability of j's children being an interaction.
+
+FIFO / LIFO / random / cheapest-first baselines are included for the
+ablation benchmark (EXPERIMENTS.md §Ablations).
+"""
+from __future__ import annotations
+
+import random as _random
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Optional, Sequence, Set
+
+from .costmodel import CostModel
+from .dag import DAG, Node
+from .predictor import InteractionPredictor
+from .slicing import source_operators
+
+Policy = str  # "utility" | "utility_p" | "fifo" | "lifo" | "random" | "cheapest"
+
+
+@dataclass
+class Scheduler:
+    dag: DAG
+    cost_model: CostModel
+    predictor: Optional[InteractionPredictor] = None
+    policy: Policy = "utility"
+    seed: int = 0
+    # extra additive utility (speculative-materialisation boosts, paper §5.2)
+    extra_utility: Optional[Callable[[Node], float]] = None
+    # anti-thrash: nodes whose results were GC'd are not recomputed without
+    # demand (an unexecuted descendant) — otherwise the background loop would
+    # recompute-evict-recompute for the whole think window
+    evicted_once: Set[int] = field(default_factory=set)
+    _rng: _random.Random = field(init=False)
+
+    def __post_init__(self) -> None:
+        self._rng = _random.Random(self.seed)
+
+    # -- utilities ---------------------------------------------------------------
+    def utility(self, source: Node, executed: Iterable[int]) -> float:
+        """Eq 1 (or Eq 4 when a predictor is used under policy='utility_p')."""
+        done = set(executed)
+        use_p = self.policy == "utility_p" and self.predictor is not None
+        total = 0.0
+        for j in self.dag.descendants(source, include_self=True):
+            c_j = self.cost_model.delivery_cost(j, done)
+            if use_p:
+                c_j *= self.predictor.p_interaction(j)
+            total += c_j
+        if self.extra_utility is not None:
+            total += self.extra_utility(source)
+        return total
+
+    # -- selection ----------------------------------------------------------------
+    def sources(self, executed: Iterable[int]) -> list[Node]:
+        done = set(executed)
+        out = []
+        for n in source_operators(self.dag, done):
+            if n.nid in self.evicted_once and all(
+                d.nid in done
+                for d in self.dag.descendants(n, include_self=False)
+            ):
+                continue  # no demand: don't churn on a GC'd result
+            out.append(n)
+        return out
+
+    def pick(self, executed: Iterable[int]) -> Optional[Node]:
+        done = set(executed)
+        srcs = self.sources(done)
+        if not srcs:
+            return None
+        if self.policy == "fifo":
+            return min(srcs, key=lambda n: n.nid)
+        if self.policy == "lifo":
+            return max(srcs, key=lambda n: n.nid)
+        if self.policy == "random":
+            return self._rng.choice(srcs)
+        if self.policy == "cheapest":
+            return min(srcs, key=lambda n: (self.cost_model.cost(n), n.nid))
+        # "utility" / "utility_p": break ties by earliest specification order
+        return max(srcs, key=lambda n: (self.utility(n, done), -n.nid))
+
+    def plan(self, executed: Iterable[int], limit: Optional[int] = None) -> list[Node]:
+        """Greedy full ordering (simulation convenience): repeatedly pick."""
+        done = set(executed)
+        order: list[Node] = []
+        while True:
+            nxt = self.pick(done)
+            if nxt is None or (limit is not None and len(order) >= limit):
+                return order
+            order.append(nxt)
+            done.add(nxt.nid)

@@ -1,0 +1,3 @@
+"""repro.data — deterministic synthetic streams + prefetching loader."""
+from .loader import PrefetchLoader
+from .synth import SynthSpec, batch_at, make_iterator, spec_for

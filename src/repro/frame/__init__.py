@@ -1,0 +1,19 @@
+"""repro.frame — partitioned columnar dataframes on JAX.
+
+The substrate the paper's opportunistic evaluation schedules over: deferred
+DataFrame API, notebook-cell parser, per-partition preemptible operators,
+think-time-aware partitioning, and shard_map-distributed blocking operators.
+"""
+from .api import ColumnRef, DataFrame, GroupBy, Predicate, ScalarHandle, Session
+from .io import Catalog, ColSpec, TableSpec, default_catalog
+from .parser import CellRunner
+from .partitioner import plan_partitions, uniform_partitions
+from .runtime import FrameRuntime, install
+from .table import Column, PTable, Partition, from_pydict
+
+__all__ = [
+    "Session", "DataFrame", "ColumnRef", "GroupBy", "Predicate", "ScalarHandle",
+    "Catalog", "TableSpec", "ColSpec", "default_catalog", "CellRunner",
+    "plan_partitions", "uniform_partitions", "FrameRuntime", "install",
+    "Column", "Partition", "PTable", "from_pydict",
+]

@@ -1,0 +1,412 @@
+"""Blocking (all-partition) operators as partial/combine pairs.
+
+Each blocking operator is decomposed into per-partition *partial* units (the
+preemption quanta) and a *combine* step — the same shape that
+`repro.frame.dist` runs under ``shard_map`` with `jax.lax` collectives, and
+that the Pallas kernels in `repro.kernels` accelerate on TPU (segment_reduce
+for groupby partials, masked_stats for describe partials, topk for
+limit-sorts).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .table import Column, Partition, PTable
+
+# --------------------------------------------------------------------------- #
+# describe / mean — Welford partials                                           #
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class ColStats:
+    n: float
+    mean: float
+    m2: float
+    mn: float
+    mx: float
+
+    def merge(self, o: "ColStats") -> "ColStats":
+        if o.n == 0:
+            return self
+        if self.n == 0:
+            return o
+        n = self.n + o.n
+        delta = o.mean - self.mean
+        mean = self.mean + delta * o.n / n
+        m2 = self.m2 + o.m2 + delta * delta * self.n * o.n / n
+        return ColStats(n, mean, m2, min(self.mn, o.mn), max(self.mx, o.mx))
+
+    @property
+    def std(self) -> float:
+        return float(np.sqrt(self.m2 / (self.n - 1))) if self.n > 1 else 0.0
+
+
+def numeric_columns(part: Partition) -> List[str]:
+    return [n for n in part.order if not part.columns[n].is_string]
+
+
+def partial_stats(part: Partition, cols: Optional[Sequence[str]] = None) -> Dict[str, ColStats]:
+    """One partition's contribution to describe/mean — a single fused pass
+    (the `masked_stats` Pallas kernel computes exactly this on TPU)."""
+    out: Dict[str, ColStats] = {}
+    for name in cols if cols is not None else numeric_columns(part):
+        col = part.columns[name]
+        data = np.asarray(col.data, dtype=np.float64)
+        if col.mask is not None:
+            valid = np.asarray(col.mask)
+            data = data[valid]
+        n = float(data.size)
+        if n == 0:
+            out[name] = ColStats(0.0, 0.0, 0.0, np.inf, -np.inf)
+        else:
+            mean = float(data.mean())
+            out[name] = ColStats(
+                n, mean, float(((data - mean) ** 2).sum()), float(data.min()),
+                float(data.max()),
+            )
+    return out
+
+
+def merge_stats(parts: Sequence[Dict[str, ColStats]]) -> Dict[str, ColStats]:
+    out: Dict[str, ColStats] = {}
+    for p in parts:
+        for k, s in p.items():
+            out[k] = out[k].merge(s) if k in out else s
+    return out
+
+
+def stats_to_table(stats: Dict[str, ColStats]) -> PTable:
+    names = list(stats)
+    stat_rows = ["count", "mean", "std", "min", "max"]
+    cols: Dict[str, Column] = {
+        "stat": Column(
+            data=np.arange(len(stat_rows), dtype=np.int32),
+            dictionary=np.array(stat_rows, dtype=object),
+        )
+    }
+    for n in names:
+        s = stats[n]
+        cols[n] = Column(
+            data=np.asarray([s.n, s.mean, s.std, s.mn, s.mx], dtype=np.float32)
+        )
+    return PTable([Partition(cols, ["stat"] + names)])
+
+
+def means_to_table(stats: Dict[str, ColStats]) -> PTable:
+    cols = {
+        n: Column(data=np.asarray([s.mean if s.n else np.nan]))
+        for n, s in stats.items()
+    }
+    return PTable([Partition(cols, list(stats))])
+
+
+# --------------------------------------------------------------------------- #
+# value_counts / unique                                                        #
+# --------------------------------------------------------------------------- #
+
+
+def partial_value_counts(part: Partition, col: str) -> Tuple[np.ndarray, np.ndarray]:
+    c = part.columns[col]
+    data = np.asarray(c.data)
+    if c.mask is not None:
+        data = data[np.asarray(c.mask)]
+    values, counts = np.unique(data, return_counts=True)
+    return values, counts
+
+
+def merge_value_counts(
+    partials: Sequence[Tuple[np.ndarray, np.ndarray]],
+    dictionary: Optional[np.ndarray],
+    col: str,
+) -> PTable:
+    acc: Dict[Any, int] = {}
+    for values, counts in partials:
+        for v, c in zip(values.tolist(), counts.tolist()):
+            acc[v] = acc.get(v, 0) + int(c)
+    items = sorted(acc.items(), key=lambda kv: (-kv[1], kv[0]))
+    vals = np.array([k for k, _ in items])
+    cnts = np.array([v for _, v in items], dtype=np.int64)
+    value_col = Column(
+        data=np.asarray(vals.astype(np.int32 if dictionary is not None else vals.dtype)),
+        dictionary=dictionary,
+    )
+    return PTable(
+        [
+            Partition(
+                {col: value_col, "count": Column(data=np.asarray(cnts))},
+                [col, "count"],
+            )
+        ]
+    )
+
+
+# --------------------------------------------------------------------------- #
+# groupby-aggregate                                                            #
+# --------------------------------------------------------------------------- #
+
+BUILTIN_AGGS = ("sum", "mean", "count", "min", "max")
+
+
+def partial_groupby(
+    part: Partition,
+    by: str,
+    aggs: Sequence[Tuple[str, str, Any]],  # (out_name, col, fn)
+    topk_keys: Optional[int] = None,
+) -> dict:
+    """Per-partition partial aggregation (the `segment_reduce` kernel's job).
+
+    ``topk_keys`` implements the paper's Fig. 2b rewrite: keep only the k
+    smallest local keys — sufficient for a global top-k-groups head.
+    """
+    key_col = part.columns[by]
+    keys = np.asarray(key_col.data)
+    valid = np.asarray(key_col.valid_mask())
+    keys_v = keys[valid]
+    order = np.argsort(keys_v, kind="stable")
+    sorted_keys = keys_v[order]
+    uniq, starts = np.unique(sorted_keys, return_index=True)
+    if topk_keys is not None and len(uniq) > topk_keys:
+        cutoff = starts[topk_keys]
+        uniq = uniq[:topk_keys]
+        starts = starts[:topk_keys]
+        order = order[:cutoff]
+        sorted_keys = sorted_keys[:cutoff]
+    partial: dict = {"keys": uniq, "aggs": {}}
+    counts = np.diff(np.append(starts, len(sorted_keys)))
+    for out_name, col, fn in aggs:
+        if callable(fn):
+            vals = np.asarray(part.columns[col].data)[valid][order]
+            groups = np.split(vals, starts[1:]) if len(starts) else []
+            partial["aggs"][out_name] = ("raw", groups)
+            continue
+        vals = np.asarray(part.columns[col].data, dtype=np.float64)[valid][order]
+        vmask = part.columns[col].mask
+        if vmask is not None:
+            vm = np.asarray(vmask)[valid][order]
+            vals = np.where(vm, vals, _neutral(fn))
+            vcounts = (
+                np.add.reduceat(vm.astype(np.float64), starts)
+                if len(starts)
+                else np.array([])
+            )
+        else:
+            vcounts = counts.astype(np.float64)
+        if fn == "sum":
+            red = np.add.reduceat(vals, starts) if len(starts) else np.array([])
+            partial["aggs"][out_name] = ("sum", red)
+        elif fn == "count":
+            # pandas semantics: count non-null values of the agg column
+            partial["aggs"][out_name] = ("sum", vcounts)
+        elif fn == "mean":
+            s = np.add.reduceat(vals, starts) if len(starts) else np.array([])
+            partial["aggs"][out_name] = ("sum_count", (s, vcounts))
+        elif fn == "min":
+            red = np.minimum.reduceat(vals, starts) if len(starts) else np.array([])
+            partial["aggs"][out_name] = ("min", red)
+        elif fn == "max":
+            red = np.maximum.reduceat(vals, starts) if len(starts) else np.array([])
+            partial["aggs"][out_name] = ("max", red)
+        else:
+            raise ValueError(f"unknown agg {fn!r}")
+    return partial
+
+
+def _neutral(fn: str) -> float:
+    return {"sum": 0.0, "count": 0.0, "mean": 0.0, "min": np.inf, "max": -np.inf}[fn]
+
+
+def merge_groupby(
+    partials: Sequence[dict],
+    by: str,
+    aggs: Sequence[Tuple[str, str, Any]],
+    dictionary: Optional[np.ndarray],
+    topk_keys: Optional[int] = None,
+) -> PTable:
+    all_keys = np.unique(np.concatenate([p["keys"] for p in partials if len(p["keys"])]))\
+        if any(len(p["keys"]) for p in partials) else np.array([])
+    if topk_keys is not None:
+        all_keys = all_keys[:topk_keys]
+    nk = len(all_keys)
+    cols: Dict[str, Column] = {
+        by: Column(
+            data=np.asarray(
+                all_keys.astype(np.int32) if dictionary is not None else all_keys
+            ),
+            dictionary=dictionary,
+        )
+    }
+    for out_name, col, fn in aggs:
+        if callable(fn):
+            buckets: List[List[np.ndarray]] = [[] for _ in range(nk)]
+            for p in partials:
+                idx = np.searchsorted(all_keys, p["keys"])
+                _, groups = p["aggs"][out_name]
+                for local_i, global_i in enumerate(idx):
+                    if global_i < nk and (nk == 0 or all_keys[global_i] == p["keys"][local_i]):
+                        buckets[global_i].append(groups[local_i])
+            vals = np.array(
+                [fn(np.concatenate(b)) if b else np.nan for b in buckets],
+                dtype=np.float64,
+            )
+            cols[out_name] = Column(data=np.asarray(vals))
+            continue
+        acc = np.full(nk, _neutral(fn if fn != "mean" else "sum"))
+        cnt = np.zeros(nk)
+        for p in partials:
+            if not len(p["keys"]):
+                continue
+            idx = np.searchsorted(all_keys, p["keys"])
+            inb = idx < nk
+            idx = idx[inb]
+            kind, payload = p["aggs"][out_name]
+            if kind == "sum":
+                np.add.at(acc, idx, payload[inb])
+            elif kind == "sum_count":
+                s, c = payload
+                np.add.at(acc, idx, s[inb])
+                np.add.at(cnt, idx, c[inb])
+            elif kind == "min":
+                np.minimum.at(acc, idx, payload[inb])
+            elif kind == "max":
+                np.maximum.at(acc, idx, payload[inb])
+        if fn == "mean":
+            acc = np.divide(acc, cnt, out=np.full(nk, np.nan), where=cnt > 0)
+        cols[out_name] = Column(data=np.asarray(acc))
+    return PTable([Partition(cols, [by] + [a[0] for a in aggs])])
+
+
+# --------------------------------------------------------------------------- #
+# sort (sample sort, optional top-k limit)                                     #
+# --------------------------------------------------------------------------- #
+
+
+def partial_sort(
+    part: Partition, by: str, ascending: bool, limit: Optional[int], n_samples: int = 32
+) -> Tuple[Partition, np.ndarray]:
+    keys = np.asarray(part.columns[by].data, dtype=np.float64)
+    if part.columns[by].mask is not None:
+        # nulls sort last: replace with +/- inf
+        m = np.asarray(part.columns[by].mask)
+        keys = np.where(m, keys, np.inf if ascending else -np.inf)
+    order = np.argsort(keys if ascending else -keys, kind="stable")
+    if limit is not None:
+        order = order[:limit]
+    sorted_part = part.take(np.asarray(order))
+    skeys = keys[order]
+    if len(skeys) == 0:
+        samples = np.array([])
+    else:
+        samples = skeys[np.linspace(0, len(skeys) - 1, min(n_samples, len(skeys))).astype(int)]
+    return sorted_part, samples
+
+
+def merge_sort(
+    partials: Sequence[Tuple[Partition, np.ndarray]],
+    by: str,
+    ascending: bool,
+    limit: Optional[int],
+) -> PTable:
+    parts = [p for p, _ in partials if p.nrows > 0]
+    if not parts:
+        return PTable([partials[0][0]])
+    merged = PTable(list(parts)).concat()
+    keys = np.asarray(merged.columns[by].data, dtype=np.float64)
+    if merged.columns[by].mask is not None:
+        m = np.asarray(merged.columns[by].mask)
+        keys = np.where(m, keys, np.inf if ascending else -np.inf)
+    order = np.argsort(keys if ascending else -keys, kind="stable")
+    if limit is not None:
+        order = order[:limit]
+    sorted_all = merged.take(np.asarray(order))
+    # re-partition to roughly the input partition granularity
+    nparts = max(1, len(partials) if limit is None else 1)
+    n = sorted_all.nrows
+    cuts = np.linspace(0, n, nparts + 1).astype(int)
+    return PTable(
+        [sorted_all.slice(int(a), int(b)) for a, b in zip(cuts[:-1], cuts[1:]) if b > a]
+        or [sorted_all]
+    )
+
+
+# --------------------------------------------------------------------------- #
+# join (broadcast right side, unique right keys) — partitionwise on the left   #
+# --------------------------------------------------------------------------- #
+
+
+def join_partition(
+    left: Partition, right: PTable, on: str, how: str = "inner"
+) -> Partition:
+    rmerged = right.concat()
+    rkeys_np = _decode_keys(rmerged.columns[on])
+    lkeys_np = _decode_keys(left.columns[on])
+    r_order = np.argsort(rkeys_np, kind="stable")
+    r_sorted = rkeys_np[r_order]
+    if len(np.unique(r_sorted)) != len(r_sorted):
+        raise ValueError("join: right-side keys must be unique (dim-table join)")
+    pos = np.searchsorted(r_sorted, lkeys_np)
+    pos = np.clip(pos, 0, max(len(r_sorted) - 1, 0))
+    matched = len(r_sorted) > 0 and True
+    hit = (r_sorted[pos] == lkeys_np) if len(r_sorted) else np.zeros(len(lkeys_np), bool)
+    gather = r_order[pos]
+    if how == "inner":
+        keep = np.where(hit)[0]
+        out = left.take(np.asarray(keep))
+        gather = gather[keep]
+        hit = hit[keep]
+    elif how == "left":
+        out = left
+    else:
+        raise ValueError(f"unsupported join how={how!r}")
+    cols = dict(out.columns)
+    order = list(out.order)
+    for name in rmerged.order:
+        if name == on:
+            continue
+        src = rmerged.columns[name]
+        taken = src.take(np.asarray(gather))
+        if how == "left":
+            miss = ~np.asarray(hit)
+            mask = taken.valid_mask() & ~miss
+            taken = Column(data=taken.data, mask=mask, dictionary=taken.dictionary)
+        out_name = name if name not in cols else f"{name}_right"
+        cols[out_name] = taken
+        order.append(out_name)
+    return Partition(cols, order)
+
+
+def _decode_keys(col: Column) -> np.ndarray:
+    if col.is_string:
+        return col.dictionary[np.asarray(col.data)].astype(str)
+    return np.asarray(col.data)
+
+
+# --------------------------------------------------------------------------- #
+# drop sparse columns (case study §6)                                          #
+# --------------------------------------------------------------------------- #
+
+
+def partial_null_counts(part: Partition) -> Dict[str, Tuple[int, int]]:
+    return {
+        n: (
+            int(np.asarray(c.valid_mask()).sum()),
+            c.nrows,
+        )
+        for n, c in part.columns.items()
+    }
+
+
+def combine_drop_sparse(
+    parent: PTable, partials: Sequence[Dict[str, Tuple[int, int]]], thresh: float
+) -> PTable:
+    total: Dict[str, List[int]] = {}
+    for p in partials:
+        for n, (v, t) in p.items():
+            acc = total.setdefault(n, [0, 0])
+            acc[0] += v
+            acc[1] += t
+    keep = [n for n in parent.column_names if total[n][0] >= thresh * total[n][1]]
+    return PTable([p.project(keep) for p in parent.partitions])

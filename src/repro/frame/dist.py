@@ -1,0 +1,89 @@
+"""Distributed blocking operators via shard_map + jax.lax collectives.
+
+The partial/combine decomposition in :mod:`repro.frame.blocking` is exactly a
+map + all-reduce: on a real pod, partitions live on devices along the ``data``
+mesh axis and the combine is a `psum`.  These functions are the device-level
+path the dry-run exercises; the Pallas kernels in :mod:`repro.kernels` replace
+the per-shard partial computations on TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def masked_stats_local(x: jnp.ndarray, mask: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+    """Single-pass fused stats over a masked column (the `masked_stats`
+    kernel's contract): (count, sum, sumsq, min, max)."""
+    m = mask.astype(x.dtype)
+    n = jnp.sum(m)
+    s = jnp.sum(x * m)
+    ss = jnp.sum(x * x * m)
+    big = jnp.asarray(jnp.inf, x.dtype)
+    mn = jnp.min(jnp.where(mask, x, big))
+    mx = jnp.max(jnp.where(mask, x, -big))
+    return n, s, ss, mn, mx
+
+
+def make_distributed_describe(mesh: Mesh, axis: str = "data"):
+    """describe over a column sharded along ``axis``: local fused pass + psum.
+
+    Returns a jit-compiled fn (x, mask) -> (count, mean, std, min, max).
+    """
+
+    def _local(x, mask):
+        n, s, ss, mn, mx = masked_stats_local(x, mask)
+        n = jax.lax.psum(n, axis)
+        s = jax.lax.psum(s, axis)
+        ss = jax.lax.psum(ss, axis)
+        mn = jax.lax.pmin(mn, axis)
+        mx = jax.lax.pmax(mx, axis)
+        mean = s / jnp.maximum(n, 1)
+        var = jnp.maximum(ss / jnp.maximum(n, 1) - mean * mean, 0.0)
+        denom = jnp.maximum(n - 1, 1)
+        std = jnp.sqrt(var * n / denom)
+        return jnp.stack([n, mean, std, mn, mx])
+
+    sharded = jax.shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=P(),
+    )
+    return jax.jit(sharded)
+
+
+def make_distributed_groupby_sum(mesh: Mesh, n_buckets: int, axis: str = "data"):
+    """groupby-sum with integer keys in [0, n_buckets): local segment_sum into
+    a dense bucket vector (the `segment_reduce` kernel's contract) + psum.
+
+    Returns jit fn (keys:int32[n], values:f32[n], valid:bool[n])
+    -> (sums[f32,B], counts[f32,B]).
+    """
+
+    def _local(keys, values, valid):
+        v = jnp.where(valid, values, 0.0)
+        c = valid.astype(values.dtype)
+        sums = jax.ops.segment_sum(v, keys, num_segments=n_buckets)
+        counts = jax.ops.segment_sum(c, keys, num_segments=n_buckets)
+        return jax.lax.psum(sums, axis), jax.lax.psum(counts, axis)
+
+    sharded = jax.shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis)),
+        out_specs=(P(), P()),
+    )
+    return jax.jit(sharded)
+
+
+def shard_column(
+    mesh: Mesh, x: jnp.ndarray, axis: str = "data"
+) -> jnp.ndarray:
+    """Place a host column onto the mesh sharded along ``axis``."""
+    return jax.device_put(x, NamedSharding(mesh, P(axis)))

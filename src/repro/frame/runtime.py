@@ -1,0 +1,452 @@
+"""Frame operator runtimes: binds dataframe semantics into the core engine.
+
+Every operator is decomposed into per-partition :class:`~repro.core.executor.Unit`
+quanta (preemptible, resumable — paper §5.1) plus a combine step.  Simulated
+unit costs come from the engine's cost model so virtual-clock benchmarks are
+reproducible; real mode measures wall time and calibrates the same model.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.costmodel import CostModel
+from ..core.dag import Node
+from ..core.engine import Engine
+from ..core.executor import OpRuntime, Unit
+from . import blocking as B
+from .exprs import eval_expr, predicate_mask
+from .io import Catalog
+from .schema import SchemaUnknown, infer_schema
+from .table import Column, Partition, PTable
+
+
+class ColumnsResult(list):
+    """Displayable result of ``df.columns``."""
+
+    @property
+    def nbytes(self) -> int:
+        return sum(len(c) for c in self)
+
+
+class FrameRuntime:
+    def __init__(self, engine: Engine, catalog: Catalog):
+        self.engine = engine
+        self.catalog = catalog
+        self.cost_model: CostModel = engine.cost_model
+        self._register_all()
+
+    # ------------------------------------------------------------- helpers --
+    def _node_cost(self, node: Node) -> float:
+        return self.cost_model.cost(node)
+
+    def _unit_costs_by_rows(self, node: Node, parts: Sequence[Partition]) -> List[float]:
+        total_rows = max(sum(p.nrows for p in parts), 1)
+        c = self._node_cost(node)
+        return [c * p.nrows / total_rows for p in parts]
+
+    def _read_bounds(self, node: Node):
+        return node.kwargs["partition_bounds"]
+
+    def _base_read(self, node: Node) -> Optional[Node]:
+        cur = node
+        while cur.parents:
+            cur = cur.parents[0]
+        return cur if cur.op == "read_table" else None
+
+    def _partition_cost(self, node: Node, j: int) -> float:
+        """Best-effort per-partition cost for the head/tail partial path."""
+        base = self._base_read(node)
+        c = self._node_cost(node)
+        if base is not None:
+            bounds = base.kwargs.get("partition_bounds")
+            if bounds:
+                total = bounds[-1][1] - bounds[0][0]
+                a, b = bounds[min(j, len(bounds) - 1)]
+                return c * (b - a) / max(total, 1)
+        return c / 16.0
+
+    # --------------------------------------------------------- registration --
+    def _register_all(self) -> None:
+        eng = self.engine
+
+        # ---- read_table (source-partitioned) --------------------------------
+        def read_units(node: Node, inputs) -> List[Unit]:
+            name = node.literals[0]
+            bounds = self._read_bounds(node)
+            spec = self.catalog.spec(name)
+            total = max(spec.nrows, 1)
+            return [
+                Unit(
+                    fn=(lambda a=a, b=b: self.catalog.generate(name, a, b)),
+                    cost_s=spec.io_seconds * (b - a) / total,
+                    tag=f"read[{a}:{b}]",
+                )
+                for a, b in bounds
+            ]
+
+        def read_combine(node, inputs, results):
+            return PTable(list(results))
+
+        eng.register_op(
+            "read_table",
+            OpRuntime(
+                units=read_units,
+                combine=read_combine,
+                source_partitioned=True,
+                gen_partition=lambda node, j: self.catalog.generate(
+                    node.literals[0], *self._read_bounds(node)[j]
+                ),
+                n_partitions=lambda node: len(self._read_bounds(node)),
+                partition_cost=lambda node, j: (
+                    self.catalog.spec(node.literals[0]).io_seconds
+                    * (self._read_bounds(node)[j][1] - self._read_bounds(node)[j][0])
+                    / max(self.catalog.spec(node.literals[0]).nrows, 1)
+                ),
+            ),
+        )
+
+        # ---- partition-wise ops ---------------------------------------------
+        def make_pw(apply_fn):
+            def units(node: Node, inputs) -> List[Unit]:
+                parent: PTable = inputs[0]
+                extras = list(inputs[1:])
+                costs = self._unit_costs_by_rows(node, parent.partitions)
+                return [
+                    Unit(
+                        fn=(lambda p=p: apply_fn(node, p, extras)),
+                        cost_s=c,
+                        tag=f"{node.op}[{i}]",
+                    )
+                    for i, (p, c) in enumerate(zip(parent.partitions, costs))
+                ]
+
+            def combine(node, inputs, results):
+                return PTable(list(results))
+
+            return OpRuntime(
+                units=units,
+                combine=combine,
+                partitionwise=True,
+                apply_partition=apply_fn,
+                partition_cost=self._partition_cost,
+            )
+
+        def filter_expr(node: Node):
+            if node.op == "filter_cmp":
+                rhs = (
+                    ("ref", 0)
+                    if node.kwargs.get("value_ref")
+                    else ("lit", node.literals[0])
+                )
+                return (node.kwargs["cmp"], ("col", node.kwargs["col"]), rhs)
+            if node.op == "isin":
+                return ("isin", ("col", node.kwargs["col"]), list(node.literals[0]))
+            if node.op == "between":
+                return (
+                    "between",
+                    ("col", node.kwargs["col"]),
+                    node.literals[0],
+                    node.literals[1],
+                )
+            return node.kwargs["expr"]
+
+        def filter_apply(node: Node, part: Partition, extras) -> Partition:
+            keep = predicate_mask(filter_expr(node), part, extras)
+            return part.select_rows(keep)
+
+        def project_apply(node: Node, part: Partition, extras) -> Partition:
+            return part.project(node.kwargs["cols"])
+
+        def assign_apply(node: Node, part: Partition, extras) -> Partition:
+            col = eval_expr(node.kwargs["expr"], part, extras)
+            return part.with_column(node.kwargs["col"], col)
+
+        def fillna_apply(node: Node, part: Partition, extras) -> Partition:
+            target_cols = node.kwargs.get("cols")  # None = all
+            if node.kwargs.get("value_ref", False):
+                from .exprs import _as_scalar
+
+                value = _as_scalar(extras[0])
+            else:
+                value = node.kwargs["value"]
+            new = dict(part.columns)
+            for name in target_cols or part.order:
+                c = part.columns[name]
+                if c.mask is None or c.is_string:
+                    continue
+                data = np.where(c.mask, c.data, np.asarray(value, c.data.dtype))
+                new[name] = Column(data=data, mask=None, dictionary=c.dictionary)
+            return Partition(new, list(part.order))
+
+        def dropna_apply(node: Node, part: Partition, extras) -> Partition:
+            subset = node.kwargs.get("subset") or part.order
+            keep = None
+            for name in subset:
+                v = part.columns[name].valid_mask()
+                keep = v if keep is None else (keep & v)
+            return part.select_rows(keep)
+
+        def join_apply(node: Node, part: Partition, extras) -> Partition:
+            right: PTable = extras[0]
+            return B.join_partition(
+                part, right, node.kwargs["on"], node.kwargs.get("how", "inner")
+            )
+
+        eng.register_op("filter", make_pw(filter_apply))
+        eng.register_op("filter_cmp", make_pw(filter_apply))
+        eng.register_op("isin", make_pw(filter_apply))
+        eng.register_op("between", make_pw(filter_apply))
+        eng.register_op("project", make_pw(project_apply))
+        eng.register_op("assign", make_pw(assign_apply))
+        eng.register_op("fillna", make_pw(fillna_apply))
+        eng.register_op("dropna", make_pw(dropna_apply))
+        eng.register_op("join", make_pw(join_apply))
+
+        # ---- head / tail -----------------------------------------------------
+        def ht_units(node, inputs):
+            return [Unit(fn=lambda: None, cost_s=1e-6, tag=node.op)]
+
+        def head_combine(node, inputs, results):
+            k = int(node.literals[0]) if node.literals else 5
+            table = PTable(list(inputs[0].partitions))
+            return table.head(k) if node.op == "head" else table.tail(k)
+
+        eng.register_op(
+            "head",
+            OpRuntime(
+                units=ht_units,
+                combine=head_combine,
+                fast_interaction=self._fast_head,
+            ),
+        )
+        eng.register_op(
+            "tail",
+            OpRuntime(
+                units=ht_units,
+                combine=head_combine,
+                fast_interaction=self._fast_head,
+            ),
+        )
+
+        # ---- columns (metadata-only) ------------------------------------------
+        def columns_units(node, inputs):
+            return [Unit(fn=lambda: None, cost_s=1e-6, tag="columns")]
+
+        def columns_combine(node, inputs, results):
+            parent = node.parents[0]
+            try:
+                return ColumnsResult(infer_schema(parent, self.catalog))
+            except (SchemaUnknown, KeyError):
+                value = self.engine.value_of(parent)
+                return ColumnsResult(value.column_names)
+
+        eng.register_op(
+            "columns",
+            OpRuntime(units=columns_units, combine=columns_combine, needs_inputs=False),
+        )
+
+        # ---- blocking: describe / mean / mean_scalar ---------------------------
+        def stats_units(node, inputs):
+            parent: PTable = inputs[0]
+            costs = self._unit_costs_by_rows(node, parent.partitions)
+            return [
+                Unit(fn=(lambda p=p: B.partial_stats(p)), cost_s=c, tag=f"stats[{i}]")
+                for i, (p, c) in enumerate(zip(parent.partitions, costs))
+            ]
+
+        eng.register_op(
+            "describe",
+            OpRuntime(
+                units=stats_units,
+                combine=lambda n, i, r: B.stats_to_table(B.merge_stats(r)),
+            ),
+        )
+        eng.register_op(
+            "mean",
+            OpRuntime(
+                units=stats_units,
+                combine=lambda n, i, r: B.means_to_table(B.merge_stats(r)),
+            ),
+        )
+
+        def mean_scalar_combine(node, inputs, results):
+            merged = B.merge_stats(results)
+            vals = [s.mean for s in merged.values() if s.n > 0]
+            return float(np.mean(vals)) if vals else float("nan")
+
+        eng.register_op(
+            "mean_scalar",
+            OpRuntime(units=stats_units, combine=mean_scalar_combine),
+        )
+
+        # ---- value_counts -------------------------------------------------------
+        def vc_units(node, inputs):
+            parent: PTable = inputs[0]
+            col = node.kwargs["col"]
+            costs = self._unit_costs_by_rows(node, parent.partitions)
+            return [
+                Unit(
+                    fn=(lambda p=p: B.partial_value_counts(p, col)),
+                    cost_s=c,
+                    tag=f"vc[{i}]",
+                )
+                for i, (p, c) in enumerate(zip(parent.partitions, costs))
+            ]
+
+        def vc_combine(node, inputs, results):
+            col = node.kwargs["col"]
+            dictionary = inputs[0].partitions[0].columns[col].dictionary
+            return B.merge_value_counts(results, dictionary, col)
+
+        eng.register_op("value_counts", OpRuntime(units=vc_units, combine=vc_combine))
+
+        # ---- groupby_agg ----------------------------------------------------------
+        def gb_units(node, inputs):
+            parent: PTable = inputs[0]
+            by = node.kwargs["by"]
+            aggs = node.kwargs["aggs"]
+            topk = node.kwargs.get("topk")
+            costs = self._unit_costs_by_rows(node, parent.partitions)
+            return [
+                Unit(
+                    fn=(lambda p=p: B.partial_groupby(p, by, aggs, topk)),
+                    cost_s=c,
+                    tag=f"gb[{i}]",
+                )
+                for i, (p, c) in enumerate(zip(parent.partitions, costs))
+            ]
+
+        def gb_combine(node, inputs, results):
+            by = node.kwargs["by"]
+            dictionary = inputs[0].partitions[0].columns[by].dictionary
+            return B.merge_groupby(
+                results, by, node.kwargs["aggs"], dictionary, node.kwargs.get("topk")
+            )
+
+        eng.register_op(
+            "groupby_agg",
+            OpRuntime(
+                units=gb_units,
+                combine=gb_combine,
+                combine_cost=lambda n, i: 0.05 * self._node_cost(n),
+            ),
+        )
+
+        # ---- sort_values -------------------------------------------------------------
+        def sort_units(node, inputs):
+            parent: PTable = inputs[0]
+            by = node.kwargs["by"]
+            asc = node.kwargs.get("ascending", True)
+            limit = node.kwargs.get("limit")
+            costs = self._unit_costs_by_rows(node, parent.partitions)
+            return [
+                Unit(
+                    fn=(lambda p=p: B.partial_sort(p, by, asc, limit)),
+                    cost_s=c,
+                    tag=f"sort[{i}]",
+                )
+                for i, (p, c) in enumerate(zip(parent.partitions, costs))
+            ]
+
+        def sort_combine(node, inputs, results):
+            return B.merge_sort(
+                results,
+                node.kwargs["by"],
+                node.kwargs.get("ascending", True),
+                node.kwargs.get("limit"),
+            )
+
+        eng.register_op(
+            "sort_values",
+            OpRuntime(
+                units=sort_units,
+                combine=sort_combine,
+                combine_cost=lambda n, i: 0.25 * self._node_cost(n),
+            ),
+        )
+
+        # ---- drop_sparse_cols (case study §6) --------------------------------------
+        def dsc_units(node, inputs):
+            parent: PTable = inputs[0]
+            costs = self._unit_costs_by_rows(node, parent.partitions)
+            return [
+                Unit(
+                    fn=(lambda p=p: B.partial_null_counts(p)),
+                    cost_s=c,
+                    tag=f"nulls[{i}]",
+                )
+                for i, (p, c) in enumerate(zip(parent.partitions, costs))
+            ]
+
+        def dsc_combine(node, inputs, results):
+            return B.combine_drop_sparse(
+                inputs[0], results, node.kwargs["thresh"]
+            )
+
+        eng.register_op(
+            "drop_sparse_cols", OpRuntime(units=dsc_units, combine=dsc_combine)
+        )
+
+        # ---- generic synthetic op (benchmark DAGs without frames) -------------------
+        def synth_units(node, inputs):
+            n_units = int(node.kwargs.get("n_units", 1))
+            c = self._node_cost(node) / n_units
+            return [
+                Unit(fn=(lambda i=i: i), cost_s=c, tag=f"synth[{i}]")
+                for i in range(n_units)
+            ]
+
+        eng.register_op(
+            "synthetic",
+            OpRuntime(units=synth_units, combine=lambda n, i, r: len(r)),
+        )
+
+    # ---- interaction fast paths (paper Fig. 2b, §5.1) -----------------------------
+    def _fast_head(self, node: Node) -> Optional[Any]:
+        """head/tail over an unexecuted groupby or sort: compute only the
+        top-k groups / rows (predicate pushdown through blocking ops)."""
+        if not node.parents:
+            return None
+        k = int(node.literals[0]) if node.literals else 5
+        parent = node.parents[0]
+        eng = self.engine
+        if parent.nid in eng.cache:
+            return None  # cheap anyway; let the normal path run
+        if parent.op == "groupby_agg" and node.op == "head":
+            frame_node = parent.parents[0]
+            frame = eng.value_of(frame_node)
+            by = parent.kwargs["by"]
+            aggs = parent.kwargs["aggs"]
+            partials = [
+                B.partial_groupby(p, by, aggs, topk_keys=k) for p in frame.partitions
+            ]
+            dictionary = frame.partitions[0].columns[by].dictionary
+            value = B.merge_groupby(partials, by, aggs, dictionary, topk_keys=k)
+            # charge a cost proportional to the group fraction computed
+            est_groups = max(self.cost_model.est_rows(parent), 1.0)
+            frac = min(1.0, k / est_groups)
+            eng.clock.advance(self._node_cost(parent) * frac)
+            return PTable(list(value.partitions)).head(k)
+        if parent.op == "sort_values":
+            frame_node = parent.parents[0]
+            frame = eng.value_of(frame_node)
+            by = parent.kwargs["by"]
+            asc = parent.kwargs.get("ascending", True)
+            if node.op == "tail":
+                asc = not asc
+            partials = [B.partial_sort(p, by, asc, limit=k) for p in frame.partitions]
+            value = B.merge_sort(partials, by, asc, limit=k)
+            # local top-k selection avoids the global merge: charge ~60 %
+            eng.clock.advance(self._node_cost(parent) * 0.6)
+            out = PTable(list(value.partitions)).head(k)
+            if node.op == "tail":
+                merged = out.concat()
+                out = PTable([merged.take(np.arange(merged.nrows - 1, -1, -1))])
+            return out
+        return None
+
+
+def install(engine: Engine, catalog: Catalog) -> FrameRuntime:
+    return FrameRuntime(engine, catalog)

@@ -1,0 +1,92 @@
+"""Stream compaction (filter) for TPU.
+
+Hardware adaptation: the CUDA idiom is warp-ballot + shared-memory scatter.
+TPUs have neither; within a VMEM tile we build a **permutation one-hot from
+the keep-prefix-sum** and compact with a matmul (MXU), the same trick as
+segment_reduce: ``pos[i] = cumsum(keep)[i]-1``, ``P[i, pos[i]] = keep[i]``,
+``compacted = x · P``.  Per-tile counts let the jit'd wrapper stitch tiles
+with a gather (cheap, XLA) — the O(n) data pass stays in the kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 512
+
+
+def _compact_kernel(
+    x_ref,  # (1, T)
+    keep_ref,  # (1, T) bool
+    out_ref,  # (1, T) compacted tile (prefix = kept, rest = fill)
+    cnt_ref,  # (1, 8) f32 count (padded vector)
+    *,
+    tile: int,
+    fill: float,
+):
+    x = x_ref[0].astype(jnp.float32)
+    keep = keep_ref[0]
+    kf = keep.astype(jnp.float32)
+    pos = jnp.cumsum(kf) - 1.0  # target slot for kept rows
+    slots = jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 1)
+    onehot = (slots == pos[:, None].astype(jnp.int32)) & keep[:, None]
+    compacted = jax.lax.dot_general(
+        x[None, :], onehot.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (1, T)
+    count = jnp.sum(kf)
+    filled = jnp.where(
+        jax.lax.broadcasted_iota(jnp.float32, (1, tile), 1) < count,
+        compacted,
+        fill,
+    )
+    out_ref[...] = filled.astype(out_ref.dtype)
+    cnt_ref[...] = jnp.full((1, 8), count, jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "fill", "interpret"))
+def filter_compact(
+    x: jnp.ndarray,  # f32[n]
+    keep: jnp.ndarray,  # bool[n]
+    tile: int = DEFAULT_TILE,
+    fill: float = 0.0,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable compaction. Returns (compacted[n] padded with ``fill``, count)."""
+    n = x.shape[0]
+    tile = min(tile, n)
+    pad = (-n) % tile
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        keep = jnp.pad(keep, (0, pad), constant_values=False)
+    nt = x.shape[0] // tile
+    tiles, counts = pl.pallas_call(
+        functools.partial(_compact_kernel, tile=tile, fill=fill),
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda t: (t, 0)),
+            pl.BlockSpec((1, tile), lambda t: (t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda t: (t, 0)),
+            pl.BlockSpec((1, 8), lambda t: (t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nt, tile), x.dtype),
+            jax.ShapeDtypeStruct((nt, 8), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x.reshape(nt, tile), keep.reshape(nt, tile))
+    # stitch tiles: global position of tile t's slot i = offset[t] + i
+    cnt = counts[:, 0].astype(jnp.int32)  # (nt,)
+    offsets = jnp.cumsum(cnt) - cnt  # exclusive prefix
+    total = jnp.sum(cnt)
+    slot = jnp.arange(tile)[None, :]
+    global_pos = jnp.where(slot < cnt[:, None], offsets[:, None] + slot, n)
+    out = jnp.full((n + 1,), fill, x.dtype)
+    out = out.at[global_pos.reshape(-1)].set(tiles.reshape(-1), mode="drop")
+    return out[:n], total

@@ -1,0 +1,80 @@
+"""Fused single-pass masked statistics (the `describe` hot loop) for TPU.
+
+One HBM read of the column produces count/sum/sumsq/min/max simultaneously —
+the memory-bound fusion that replaces five separate passes.  Row tiles stream
+through the grid; running moments live in VMEM scratch; one final write.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TILE = 1024
+_BIG = jnp.inf
+
+
+def _stats_kernel(
+    x_ref,  # (1, T)
+    m_ref,  # (1, T) bool
+    out_ref,  # (1, 8) f32: count, sum, sumsq, min, max, (3 pad)
+    acc_scr,  # (1, 8) f32
+    *,
+    num_tiles: int,
+):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        idx = jax.lax.broadcasted_iota(jnp.int32, (1, 8), 1)
+        acc_scr[...] = jnp.where(
+            idx == 3, _BIG, jnp.where(idx == 4, -_BIG, 0.0)
+        ).astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)
+    m = m_ref[0]
+    mf = m.astype(jnp.float32)
+    cur = acc_scr[0, :]
+    count = cur[0] + jnp.sum(mf)
+    s = cur[1] + jnp.sum(x * mf)
+    ss = cur[2] + jnp.sum(x * x * mf)
+    mn = jnp.minimum(cur[3], jnp.min(jnp.where(m, x, _BIG)))
+    mx = jnp.maximum(cur[4], jnp.max(jnp.where(m, x, -_BIG)))
+    acc_scr[0, :] = jnp.stack([count, s, ss, mn, mx, 0.0, 0.0, 0.0])
+
+    @pl.when(t == num_tiles - 1)
+    def _fin():
+        out_ref[...] = acc_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def masked_stats(
+    x: jnp.ndarray,  # f32[n]
+    mask: jnp.ndarray,  # bool[n]
+    tile: int = DEFAULT_TILE,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns f32[5]: (count, sum, sumsq, min, max) over valid entries."""
+    n = x.shape[0]
+    tile = min(tile, n)
+    pad = (-n) % tile
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        mask = jnp.pad(mask, (0, pad), constant_values=False)
+    nt = x.shape[0] // tile
+    out = pl.pallas_call(
+        functools.partial(_stats_kernel, num_tiles=nt),
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda t: (t, 0)),
+            pl.BlockSpec((1, tile), lambda t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 8), lambda t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 8), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, 8), jnp.float32)],
+        interpret=interpret,
+    )(x.reshape(nt, tile), mask.reshape(nt, tile))
+    return out[0, :5]

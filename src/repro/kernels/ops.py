@@ -1,0 +1,99 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+Backend selection:
+  * ``"pallas"``    — Mosaic lowering (real TPU),
+  * ``"interpret"`` — Pallas interpret mode (CPU correctness; used by tests),
+  * ``"xla"``       — the pure-jnp reference math (CPU dry-run / fallback;
+                       same semantics, XLA-fused).
+
+Default: pallas on TPU backends, xla elsewhere — so library code can call
+these unconditionally and stay runnable on this CPU container while targeting
+TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .filter_compact import filter_compact as _filter_pallas
+from .flash_attention import flash_attention as _attn_pallas
+from .masked_stats import masked_stats as _stats_pallas
+from .segment_reduce import segment_reduce as _segment_pallas
+from .ssd_chunk import ssd_chunk_scan as _ssd_pallas
+from .topk import topk as _topk_pallas
+
+_FORCED: Optional[str] = None
+_XLA_UNROLL = False  # roofline probes: unroll xla-path loops for exact flops
+
+
+def set_backend(backend: Optional[str]) -> None:
+    """Force a backend globally ("pallas" | "interpret" | "xla" | None=auto)."""
+    global _FORCED
+    _FORCED = backend
+
+
+def set_xla_unroll(flag: bool) -> None:
+    global _XLA_UNROLL
+    _XLA_UNROLL = flag
+
+
+def backend() -> str:
+    if _FORCED is not None:
+        return _FORCED
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def attention(
+    q, k, v, causal: bool = True, window: Optional[int] = None,
+    scale: Optional[float] = None, q_offset: int = 0,
+):
+    b = backend()
+    if b == "xla":
+        return ref.attention_xla_chunked(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset, unroll=_XLA_UNROLL,
+        )
+    return _attn_pallas(
+        q, k, v, causal=causal, window=window, scale=scale, q_offset=q_offset,
+        interpret=(b == "interpret"),
+    )
+
+
+def segment_reduce(keys, values, valid, num_buckets: int, mode: str = "sum"):
+    b = backend()
+    if b == "xla":
+        return ref.segment_reduce_ref(keys, values, valid, num_buckets, mode)
+    return _segment_pallas(
+        keys, values, valid, num_buckets, mode=mode, interpret=(b == "interpret")
+    )
+
+
+def masked_stats(x, mask):
+    b = backend()
+    if b == "xla":
+        return ref.masked_stats_ref(x, mask)
+    return _stats_pallas(x, mask, interpret=(b == "interpret"))
+
+
+def filter_compact(x, keep, fill: float = 0.0):
+    b = backend()
+    if b == "xla":
+        return ref.filter_compact_ref(x, keep, fill)
+    return _filter_pallas(x, keep, fill=fill, interpret=(b == "interpret"))
+
+
+def topk(x, k: int, largest: bool = True):
+    b = backend()
+    if b == "xla":
+        return ref.topk_ref(x, k, largest)
+    return _topk_pallas(x, k, largest=largest, interpret=(b == "interpret"))
+
+
+def ssd_scan(x, log_a, bmat, cmat, chunk: int = 128):
+    b = backend()
+    if b == "xla":
+        return ref.ssd_xla_chunked(x, log_a, bmat, cmat, chunk=chunk)
+    return _ssd_pallas(x, log_a, bmat, cmat, chunk=chunk, interpret=(b == "interpret"))

@@ -1,0 +1,127 @@
+"""Segment reduction (groupby-aggregate / MoE combine) for TPU.
+
+Hardware adaptation: GPU groupby kernels scatter with atomics; TPUs have no
+atomics and hate random scatter.  We reformulate the reduction as a blocked
+**one-hot × matmul**: for a tile of T rows and a bucket block of Bk buckets,
+``onehot[t, bk] = (keys[t] == bucket)`` and ``sums_block += values · onehot``
+— a (1×T)·(T×Bk) contraction that runs on the MXU.  Row tiles stream through
+the innermost grid dimension, accumulating into the output bucket block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 512  # rows per grid step
+DEFAULT_BUCKET_BLOCK = 128  # buckets per output block (lane-aligned)
+
+
+def _segment_kernel(
+    keys_ref,  # (1, T) int32
+    vals_ref,  # (1, T) f32
+    valid_ref,  # (1, T) bool
+    out_ref,  # (1, Bk) f32 reduced
+    cnt_ref,  # (1, Bk) f32 counts
+    *,
+    tile: int,
+    bucket_block: int,
+    num_row_tiles: int,
+    mode: str,
+):
+    bi = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        init = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf}[mode]
+        out_ref[...] = jnp.full_like(out_ref, init)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    keys = keys_ref[0]  # (T,)
+    vals = vals_ref[0].astype(jnp.float32)
+    valid = valid_ref[0]
+
+    bucket_ids = bi * bucket_block + jax.lax.broadcasted_iota(
+        jnp.int32, (tile, bucket_block), 1
+    )
+    onehot = (keys[:, None] == bucket_ids) & valid[:, None]  # (T, Bk)
+    oh_f = onehot.astype(jnp.float32)
+
+    cnt_ref[...] += jnp.sum(oh_f, axis=0, keepdims=True)
+    if mode == "sum":
+        # (1,T) @ (T,Bk) on the MXU
+        out_ref[...] += jax.lax.dot_general(
+            vals[None, :], oh_f, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    elif mode == "min":
+        contrib = jnp.where(onehot, vals[:, None], jnp.inf)
+        out_ref[...] = jnp.minimum(out_ref[...], jnp.min(contrib, axis=0)[None])
+    elif mode == "max":
+        contrib = jnp.where(onehot, vals[:, None], -jnp.inf)
+        out_ref[...] = jnp.maximum(out_ref[...], jnp.max(contrib, axis=0)[None])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_buckets", "mode", "tile", "bucket_block", "interpret"),
+)
+def segment_reduce(
+    keys: jnp.ndarray,  # int32[n]
+    values: jnp.ndarray,  # f32[n]
+    valid: jnp.ndarray,  # bool[n]
+    num_buckets: int,
+    mode: str = "sum",
+    tile: int = DEFAULT_TILE,
+    bucket_block: int = DEFAULT_BUCKET_BLOCK,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (reduced[num_buckets], counts[num_buckets])."""
+    n = keys.shape[0]
+    tile = min(tile, n)
+    pad_n = (-n) % tile
+    if pad_n:
+        keys = jnp.pad(keys, (0, pad_n), constant_values=-1)
+        values = jnp.pad(values, (0, pad_n))
+        valid = jnp.pad(valid, (0, pad_n), constant_values=False)
+    n_padded = keys.shape[0]
+    bucket_block = min(bucket_block, num_buckets)
+    pad_b = (-num_buckets) % bucket_block
+    nb = num_buckets + pad_b
+    num_row_tiles = n_padded // tile
+    num_bucket_blocks = nb // bucket_block
+
+    keys2 = keys.reshape(num_row_tiles, tile)
+    vals2 = values.reshape(num_row_tiles, tile)
+    valid2 = valid.reshape(num_row_tiles, tile)
+
+    grid = (num_bucket_blocks, num_row_tiles)
+    out, cnt = pl.pallas_call(
+        functools.partial(
+            _segment_kernel,
+            tile=tile,
+            bucket_block=bucket_block,
+            num_row_tiles=num_row_tiles,
+            mode=mode,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda b, t: (t, 0)),
+            pl.BlockSpec((1, tile), lambda b, t: (t, 0)),
+            pl.BlockSpec((1, tile), lambda b, t: (t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bucket_block), lambda b, t: (0, b)),
+            pl.BlockSpec((1, bucket_block), lambda b, t: (0, b)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, nb), jnp.float32),
+            jax.ShapeDtypeStruct((1, nb), jnp.float32),
+        ],
+        interpret=interpret,
+    )(keys2, vals2, valid2)
+    return out[0, :num_buckets], cnt[0, :num_buckets]

@@ -1,0 +1,150 @@
+"""Mamba-2 SSD intra-chunk kernel (state-space duality) for TPU.
+
+The SSD algorithm (Dao & Gu, arXiv:2405.21060) splits the sequence into
+chunks: within a chunk the recurrence is computed *quadratically* as masked
+attention (MXU-friendly), and each chunk also emits its contribution to the
+running state; the cheap inter-chunk state recurrence runs as a lax.scan in
+the wrapper (`repro.models.ssd`).
+
+Per (chunk, head) grid cell this kernel computes, for chunk length L,
+state dim N, head dim P:
+
+    L_mask[i,j] = exp(cum_i - cum_j) * (j <= i)      (decay mask, f32)
+    Y_intra     = ((C Bᵀ) ⊙ L_mask) · X              (L,N)x(N,L)→(L,L)·(L,P)
+    S_chunk     = Bᵀ · (decay_to_end ⊙ X)            (N,L)·(L,P) → (N,P)
+    y_off[i]    = C_i · S_in  * exp(cum_i)           (inbound-state term)
+
+All three contractions hit the MXU; the decay masks are VPU element-wise ops.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(
+    x_ref,  # (1, 1, L, P)
+    loga_ref,  # (1, 1, L, 1)
+    b_ref,  # (1, L, N)
+    c_ref,  # (1, L, N)
+    hin_ref,  # (1, 1, N, P) inbound state for this chunk
+    y_ref,  # (1, 1, L, P)
+    hout_ref,  # (1, 1, N, P) this chunk's state contribution + decayed inbound
+):
+    x = x_ref[0, 0].astype(jnp.float32)  # (L, P)
+    loga = loga_ref[0, 0, :, 0].astype(jnp.float32)  # (L,)
+    b = b_ref[0].astype(jnp.float32)  # (L, N)
+    c = c_ref[0].astype(jnp.float32)  # (L, N)
+    h_in = hin_ref[0, 0].astype(jnp.float32)  # (N, P)
+
+    cum = jnp.cumsum(loga)  # (L,) inclusive
+    L = x.shape[0]
+    # decay mask: exp(cum_i - cum_j) for j <= i (includes a_i ... a_{j+1})
+    diff = cum[:, None] - cum[None, :]
+    causal = (
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    )
+    lmask = jnp.where(causal, jnp.exp(diff), 0.0)  # (L, L)
+
+    cb = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, L)
+    y_intra = jax.lax.dot_general(
+        cb * lmask, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, P)
+
+    # inbound-state contribution: y_off[i] = exp(cum_i) * C_i · h_in
+    ch = jax.lax.dot_general(
+        c, h_in, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, P)
+    y = y_intra + jnp.exp(cum)[:, None] * ch
+
+    # chunk state: S = sum_j exp(cum_L - cum_j) b_j x_jᵀ  (+ decayed inbound)
+    decay_to_end = jnp.exp(cum[-1] - cum)  # (L,)
+    bw = b * decay_to_end[:, None]  # (L, N)
+    s_chunk = jax.lax.dot_general(
+        bw, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (N, P)
+    h_out = jnp.exp(cum[-1]) * h_in + s_chunk
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    hout_ref[0, 0] = h_out.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_scan(
+    x: jnp.ndarray,  # (S, H, P)
+    log_a: jnp.ndarray,  # (S, H)
+    b: jnp.ndarray,  # (S, N)
+    c: jnp.ndarray,  # (S, N)
+    chunk: int = 128,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full SSD via chunked kernel + sequential inter-chunk state scan.
+
+    Matches :func:`repro.kernels.ref.ssd_ref` (h0 = 0). Returns (y, h_final).
+    """
+    S, H, P = x.shape
+    N = b.shape[1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, f"S={S} must be divisible by chunk={chunk}"
+    nc = S // chunk
+
+    xc = x.reshape(nc, chunk, H, P).transpose(0, 2, 1, 3)  # (nc, H, L, P)
+    lac = log_a.reshape(nc, chunk, H).transpose(0, 2, 1)[..., None]  # (nc,H,L,1)
+    bc = b.reshape(nc, chunk, N)
+    cc = c.reshape(nc, chunk, N)
+
+    call = pl.pallas_call(
+        _ssd_kernel,
+        grid=(nc, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, h: (i, 0, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, h: (i, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda i, h: (i, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda i, h: (i, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nc, H, chunk, P), x.dtype),
+            jax.ShapeDtypeStruct((nc, H, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+
+    # Pass 1: zero inbound states → per-chunk (y_intra, local state S_k).
+    zeros_in = jnp.zeros((nc, H, N, P), jnp.float32)
+    y_intra, s_local = call(xc, lac, bc, cc, zeros_in)
+
+    # Inter-chunk state recurrence (cheap): h_k = D_k h_{k-1} + S_k where
+    # D_k = exp(sum log_a over chunk k).
+    chunk_decay = jnp.exp(
+        jnp.sum(lac[..., 0], axis=-1)
+    )  # (nc, H)
+
+    def scan_fn(h, inp):
+        d_k, s_k = inp  # (H,), (H,N,P)
+        h_new = d_k[:, None, None] * h + s_k
+        return h_new, h
+
+    h0 = jnp.zeros((H, N, P), jnp.float32)
+    h_final, h_in_per_chunk = jax.lax.scan(scan_fn, h0, (chunk_decay, s_local))
+
+    # Pass 2 correction: add the inbound-state output term without re-running
+    # the quadratic part: y_off[i] = exp(cum_i) C_i · h_in  (batched einsum).
+    cum = jnp.cumsum(lac[..., 0], axis=-1)  # (nc, H, L)
+    ch = jnp.einsum(
+        "nlk,nhkp->nhlp", cc.astype(jnp.float32), h_in_per_chunk
+    )  # (nc,H,L,P)
+    y = y_intra.astype(jnp.float32) + jnp.exp(cum)[..., None] * ch
+    y = y.transpose(0, 2, 1, 3).reshape(S, H, P).astype(x.dtype)
+    return y, h_final

@@ -1,0 +1,66 @@
+"""Top-k selection (head-after-sort pushdown, paper §5.1) for TPU.
+
+The paper notes sort-interactions should "prioritize the generation of the K
+first sorted results".  Per VMEM tile we run k rounds of (max, mask) on the
+VPU — no data-dependent control flow, no sort network bookkeeping — emitting
+each tile's top-k; the wrapper merges tile winners (k·num_tiles values) with
+one final jnp sort (tiny).  k ≤ 128 keeps each round a single vector op.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 1024
+_NEG = -jnp.inf
+
+
+def _topk_kernel(x_ref, out_ref, *, tile: int, k: int):
+    x = x_ref[0].astype(jnp.float32)  # (T,)
+
+    def round_fn(i, carry):
+        vals, best = carry
+        cur = jnp.max(vals)
+        best = best.at[0, i].set(cur)
+        # mask out one occurrence of the max (the first)
+        idx = jnp.argmax(vals)
+        vals = vals.at[idx].set(_NEG)
+        return vals, best
+
+    best = jnp.full((1, k), _NEG, jnp.float32)
+    _, best = jax.lax.fori_loop(0, k, round_fn, (x, best))
+    out_ref[...] = best
+
+
+@functools.partial(jax.jit, static_argnames=("k", "largest", "tile", "interpret"))
+def topk(
+    x: jnp.ndarray,  # f32[n]
+    k: int,
+    largest: bool = True,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Top-k values of x, sorted descending (ascending if largest=False)."""
+    n = x.shape[0]
+    assert k >= 1
+    xs = x if largest else -x
+    tile = max(min(tile, n), k)
+    pad = (-n) % tile
+    if pad:
+        xs = jnp.pad(xs, (0, pad), constant_values=_NEG)
+    nt = xs.shape[0] // tile
+    winners = pl.pallas_call(
+        functools.partial(_topk_kernel, tile=tile, k=k),
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((1, tile), lambda t: (t, 0))],
+        out_specs=pl.BlockSpec((1, k), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt, k), jnp.float32),
+        interpret=interpret,
+    )(xs.reshape(nt, tile))
+    merged = jnp.sort(winners.reshape(-1))[::-1][:k]
+    out = merged if largest else -merged
+    return out.astype(x.dtype)

@@ -1,0 +1,187 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Terms (per the brief; TPU v5e-class constants):
+    compute    = HLO_FLOPs   / (chips × 197e12 FLOP/s bf16)
+    memory     = HLO_bytes   / (chips × 819e9 B/s HBM)
+    collective = Σ collective operand bytes / (chips × links × 50e9 B/s ICI)
+
+``cost_analysis()`` on this JAX version reports **per-device** (post-SPMD)
+flops/bytes — verified in tests/test_roofline.py — so chips-division applies
+only to the collective term (whose bytes we sum over the whole module and
+normalise by device count).
+
+collective bytes are not in cost_analysis: we parse the post-optimisation HLO
+and sum operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+ICI_LINKS = 3  # usable links/chip on a 2-D torus slice (conservative ~3)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(.*?)\s*"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce"
+    r"|reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\("
+)
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum *output* shape bytes of every collective op, by op kind.
+
+    Output-shape accounting is the right first-order proxy for link traffic:
+    all-gather's output is the gathered tensor, all-reduce moves ~2× payload
+    in a ring (we report payload; the ring factor is a constant the analysis
+    notes), collective-permute's output is exactly the transferred block.
+    """
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        kind = kind.replace("-start", "")  # async start/done pairs: count once
+        shapes = _SHAPE_RE.findall(shape_str)
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        if nbytes == 0:
+            continue
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_by_kind: Dict[str, int]
+    peak_memory_per_device: float
+    model_flops: float  # 6·N·D (active params for MoE)
+    output_bytes: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / (ICI_BW * ICI_LINKS)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips): how much compiled compute is
+        'useful' — catches remat/padding/redundancy waste."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: useful flops / (bound time × peak)."""
+        bound = max(self.t_compute, self.t_memory, self.t_collective)
+        if bound <= 0:
+            return 0.0
+        per_chip_useful = self.model_flops / self.chips
+        return per_chip_useful / (bound * PEAK_FLOPS)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": round(self.t_compute, 6),
+            "t_memory_s": round(self.t_memory, 6),
+            "t_collective_s": round(self.t_collective, 6),
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_dev": self.flops_per_device,
+            "useful_flops_frac": round(self.useful_flops_fraction, 4),
+            "roofline_frac": round(self.roofline_fraction, 4),
+            "peak_mem_gb": round(self.peak_memory_per_device / 2**30, 3),
+            "collectives": self.collective_by_kind,
+        }
+
+
+def analyze(
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    compiled,
+    hlo_text: str,
+    model_flops: float,
+) -> RooflineReport:
+    ca = compiled.cost_analysis()
+    ma = compiled.memory_analysis()
+    coll = collective_bytes_from_hlo(hlo_text)
+    peak = (
+        ma.argument_size_in_bytes
+        + ma.output_size_in_bytes
+        + ma.temp_size_in_bytes
+        - ma.alias_size_in_bytes
+    )
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_device=float(ca.get("flops", 0.0)),
+        bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        collective_bytes_per_device=float(sum(coll.values())),
+        collective_by_kind=coll,
+        peak_memory_per_device=float(peak),
+        model_flops=model_flops,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (N active for MoE); decode: D = global_batch new
+    tokens (one step), with the attention KV-read excluded by convention."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens  # forward only
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

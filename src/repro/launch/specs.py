@@ -1,0 +1,107 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation (the dry-run contract).
+
+For ``[vlm]``/``[audio]`` archs the modality frontend is a stub: specs include
+the precomputed patch/frame embeddings per the brief.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.base import ShardCtx
+from ..models.lm import init_cache
+
+
+def train_input_specs(
+    cfg: ModelConfig, shape: ShapeConfig, ctx: ShardCtx
+) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, P]]:
+    B, S = shape.global_batch, shape.seq_len
+    dspec = ctx.data_spec()
+    if cfg.n_codebooks > 1:
+        tok = jax.ShapeDtypeStruct((B, cfg.n_codebooks, S), jnp.int32)
+        tok_spec = P(dspec, None, None)
+    else:
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        tok_spec = P(dspec, None)
+    shapes = {"tokens": tok, "labels": tok}
+    specs = {"tokens": tok_spec, "labels": tok_spec}
+    if cfg.n_vis_tokens:
+        shapes["vis_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_vis_tokens, cfg.d_model), jnp.bfloat16
+        )
+        specs["vis_embeds"] = P(dspec, None, None)
+    return shapes, specs
+
+
+def decode_input_specs(
+    cfg: ModelConfig, shape: ShapeConfig, ctx: ShardCtx
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """serve_step inputs: one new token + the KV/state cache of seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    # batch=1 (long_500k) cannot shard over the data axes → replicate batch
+    dspec = ctx.data_spec() if B % ctx.dp_total == 0 else None
+    if cfg.n_codebooks > 1:
+        tok = jax.ShapeDtypeStruct((B, cfg.n_codebooks, 1), jnp.int32)
+        tok_spec = P(dspec, None, None)
+    else:
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        tok_spec = P(dspec, None)
+
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    cache_specs = make_cache_specs(cfg, ctx, cache, batch_shardable=(B % ctx.dp_total == 0))
+    shapes = {"tokens": tok, "cache": cache, "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    specs = {"tokens": tok_spec, "cache": cache_specs, "pos": P()}
+    return shapes, specs
+
+
+def make_cache_specs(cfg: ModelConfig, ctx: ShardCtx, cache_shapes,
+                     batch_shardable: bool = True):
+    """Shardings per cache leaf, identified by tree path (field names).
+
+    KV k/v (B, Hkv, C, D): batch→data; kv-heads→model when they divide, else
+    **sequence-dim C→model** (split-S decode, FlashDecoding-style — bounds
+    per-chip cache memory for decode_32k, DESIGN.md §5).  SSD states
+    (B, H, N, P): heads→model.  Conv tails and RG-LRU states: width→model when
+    divisible.  Leaves under 'groups' carry a leading scan-stack dim
+    (replicated).
+    """
+    dspec = ctx.data_spec() if batch_shardable else None
+
+    def leaf_spec(path, leaf) -> P:
+        keys = jax.tree_util.keystr(path)
+        stacked = "groups" in keys
+        field = keys.rsplit(".", 1)[-1] if "." in keys else ""
+        core = list(leaf.shape[1:] if stacked else leaf.shape)
+        if not core:  # scalar pos
+            return P(*([None] if stacked else []))
+        axes: list = [None] * len(core)
+        if field in ("k", "v") and len(core) == 4:
+            axes[0] = dspec
+            if core[1] % ctx.tp == 0 and core[1] >= ctx.tp:
+                axes[1] = ctx.model_axis  # kv-head sharded
+            elif core[2] % ctx.tp == 0:
+                axes[2] = ctx.model_axis  # split-S
+        elif field == "h" and len(core) == 4:  # SSD state (B,H,N,P)
+            axes[0] = dspec
+            if core[1] % ctx.tp == 0:
+                axes[1] = ctx.model_axis
+        elif field == "h" and len(core) == 2:  # RG-LRU state (B,W)
+            axes[0] = dspec
+            if core[1] % ctx.tp == 0:
+                axes[1] = ctx.model_axis
+        elif field == "conv" and len(core) == 3:  # conv tail (B,W-1,C)
+            axes[0] = dspec
+            if core[2] % ctx.tp == 0:
+                axes[2] = ctx.model_axis
+        else:
+            axes[0] = dspec if len(core) >= 1 and core[0] else None
+        if stacked:
+            axes = [None] + axes
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shapes)

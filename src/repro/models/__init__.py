@@ -1,0 +1,9 @@
+"""repro.models — the composable decoder-LM zoo for the assigned archs."""
+from .base import ParamSpec, ShardCtx, init_params, param_count, tree_specs_to_shapes
+from .lm import forward, init_cache, init_model, lm_loss, model_spec
+
+__all__ = [
+    "ShardCtx", "ParamSpec", "init_params", "param_count",
+    "tree_specs_to_shapes", "forward", "init_cache", "init_model",
+    "lm_loss", "model_spec",
+]

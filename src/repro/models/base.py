@@ -1,0 +1,151 @@
+"""Parameter declaration machinery: one source of truth for shapes, shardings
+and initialisation.
+
+``spec_tree(cfg, shard)`` builds a pytree of :class:`ParamSpec` (shape, dtype,
+PartitionSpec, init rule); ``init_params`` materialises arrays from it (smoke
+tests), while the dry-run turns the same tree into ShapeDtypeStructs +
+shardings without allocating (launch/dryrun.py).
+
+Sharding scheme (DESIGN.md §5): Megatron TP over ``model`` + ZeRO/FSDP over
+the data axes (params' non-TP dim sharded over ``("pod","data")`` when the
+dim divides; otherwise replicated), batch over the data axes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Mesh-shape context: axis names and sizes (no live mesh needed)."""
+
+    tp: int = 1
+    dp: int = 1
+    pods: int = 1
+    model_axis: str = "model"
+    data_axes: Tuple[str, ...] = ("data",)  # ("pod","data") for multi-pod
+
+    @property
+    def dp_total(self) -> int:
+        return self.dp * self.pods
+
+    def data_spec(self):  # the combined data-parallel mesh axes
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+
+SINGLE = ShardCtx()
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    pspec: P
+    init: str = "normal"  # "normal:<scale>" | "zeros" | "ones"
+    dtype: Any = jnp.float32
+
+    def materialise(self, key) -> jnp.ndarray:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        scale = 0.02
+        if ":" in self.init:
+            scale = float(self.init.split(":", 1)[1])
+        return (
+            jax.random.normal(key, self.shape, jnp.float32) * scale
+        ).astype(self.dtype)
+
+
+def _divides(dim: int, parts: int) -> bool:
+    return parts > 0 and dim % parts == 0
+
+
+def fsdp_axis(ctx: ShardCtx, dim: int):
+    """Shard ``dim`` over the data axes if it divides; else replicate."""
+    if ctx.dp_total > 1 and _divides(dim, ctx.dp_total):
+        return ctx.data_spec()
+    return None
+
+
+def tp_axis(ctx: ShardCtx, dim: int):
+    if ctx.tp > 1 and _divides(dim, ctx.tp):
+        return ctx.model_axis
+    return None
+
+
+def matrix_spec(
+    ctx: ShardCtx,
+    shape: Tuple[int, ...],
+    tp_dim: Optional[int],
+    fsdp_dim: Optional[int],
+    init: str = "normal",
+) -> ParamSpec:
+    """A weight matrix with one TP-sharded dim and one FSDP-sharded dim."""
+    axes: list = [None] * len(shape)
+    if tp_dim is not None:
+        axes[tp_dim] = tp_axis(ctx, shape[tp_dim])
+    if fsdp_dim is not None and axes[fsdp_dim] is None:
+        axes[fsdp_dim] = fsdp_axis(ctx, shape[fsdp_dim])
+    return ParamSpec(shape=tuple(shape), pspec=P(*axes), init=init)
+
+
+def replicated_spec(shape: Tuple[int, ...], init: str = "ones") -> ParamSpec:
+    return ParamSpec(shape=tuple(shape), pspec=P(*([None] * len(shape))), init=init)
+
+
+# ------------------------------------------------------------------ pytrees --
+
+
+def tree_specs_to_shapes(tree):
+    """ParamSpec tree → ShapeDtypeStruct tree (+ matching PartitionSpec tree)."""
+    shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+    specs = jax.tree.map(
+        lambda s: s.pspec, tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    return shapes, specs
+
+
+def init_params(tree, key) -> Any:
+    """Materialise a ParamSpec tree into arrays (deterministic by path)."""
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    arrays = [leaf.materialise(k) for leaf, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def stack_specs(spec: ParamSpec, n: int) -> ParamSpec:
+    """Prepend a scan (layer-stack) dimension — replicated across the mesh."""
+    return ParamSpec(
+        shape=(n,) + spec.shape,
+        pspec=P(*((None,) + tuple(spec.pspec))),
+        init=spec.init,
+        dtype=spec.dtype,
+    )
+
+
+def stack_tree(tree, n: int):
+    return jax.tree.map(
+        lambda s: stack_specs(s, n), tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def tree_index(tree, i):
+    """Select layer ``i`` from a stacked param tree (inside scan bodies)."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def param_count(tree) -> int:
+    leaves = jax.tree.flatten(tree, is_leaf=lambda x: isinstance(x, ParamSpec))[0]
+    return int(sum(np.prod(s.shape) for s in leaves))

@@ -1,0 +1,101 @@
+"""Per-layer blocks: (pre-norm residual) attention / local-attention / MoE /
+SSD / RG-LRU compositions, with per-type caches."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import KVCache, attn_spec, attention_block, init_kv_cache
+from .base import ShardCtx
+from .layers import apply_mlp, apply_norm, mlp_spec, norm_spec
+from .moe import moe_ffn, moe_ffn_sharded, moe_spec
+from .rglru import RGLRUCache, init_rglru_cache, rglru_block, rglru_spec
+from .ssd import SSDCache, init_ssd_cache, ssd_block, ssd_spec
+
+
+def block_spec(btype: str, cfg: ModelConfig, ctx: ShardCtx) -> Dict[str, Any]:
+    if btype in ("attn", "local_attn"):
+        spec = {
+            "norm1": norm_spec(cfg),
+            "attn": attn_spec(cfg, ctx),
+            "norm2": norm_spec(cfg),
+        }
+        if cfg.moe is not None:
+            spec["moe"] = moe_spec(cfg, ctx)
+        else:
+            spec["mlp"] = mlp_spec(cfg, ctx)
+        return spec
+    if btype == "ssd":
+        return {"norm1": norm_spec(cfg), "ssd": ssd_spec(cfg, ctx)}
+    if btype == "rglru":
+        return {
+            "norm1": norm_spec(cfg),
+            "rglru": rglru_spec(cfg, ctx),
+            "norm2": norm_spec(cfg),
+            "mlp": mlp_spec(cfg, ctx),
+        }
+    raise ValueError(f"unknown block type {btype!r}")
+
+
+def init_block_cache(btype: str, cfg: ModelConfig, batch: int, capacity: int):
+    if btype == "attn":
+        return init_kv_cache(cfg, batch, capacity, window=cfg.window)
+    if btype == "local_attn":
+        return init_kv_cache(cfg, batch, capacity, window=cfg.local_window)
+    if btype == "ssd":
+        return init_ssd_cache(cfg, batch)
+    if btype == "rglru":
+        return init_rglru_cache(cfg, batch)
+    raise ValueError(btype)
+
+
+def block_fwd(
+    btype: str,
+    params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    ctx: ShardCtx,
+    cache=None,
+    use_ep: bool = False,
+    mesh=None,
+) -> Tuple[jnp.ndarray, Any, Dict[str, jnp.ndarray]]:
+    aux: Dict[str, jnp.ndarray] = {}
+    if btype in ("attn", "local_attn"):
+        window = cfg.window if btype == "attn" else cfg.local_window
+        h, new_cache = attention_block(
+            params["attn"],
+            cfg,
+            apply_norm(params["norm1"], cfg, x),
+            positions,
+            window=window,
+            cache=cache,
+            mesh=mesh,
+            ctx=ctx,
+        )
+        x = x + h
+        h2_in = apply_norm(params["norm2"], cfg, x)
+        if cfg.moe is not None:
+            if use_ep and mesh is not None:
+                h2, aux = moe_ffn_sharded(params["moe"], cfg, h2_in, ctx, mesh)
+            else:
+                h2, aux = moe_ffn(params["moe"], cfg, h2_in, ctx)
+        else:
+            h2 = apply_mlp(params["mlp"], cfg, h2_in)
+        return x + h2, new_cache, aux
+    if btype == "ssd":
+        h, new_cache = ssd_block(
+            params["ssd"], cfg, apply_norm(params["norm1"], cfg, x), cache=cache
+        )
+        return x + h, new_cache, aux
+    if btype == "rglru":
+        h, new_cache = rglru_block(
+            params["rglru"], cfg, apply_norm(params["norm1"], cfg, x), cache=cache
+        )
+        x = x + h
+        h2 = apply_mlp(params["mlp"], cfg, apply_norm(params["norm2"], cfg, x))
+        return x + h2, new_cache, aux
+    raise ValueError(btype)

@@ -1,0 +1,147 @@
+"""Shared model layers: norms, RoPE, MLPs, embeddings."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .base import ParamSpec, ShardCtx, matrix_spec, replicated_spec
+
+
+def compute_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ----------------------------------------------------------------- norms ----
+
+
+def norm_spec(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm_type == "layernorm":
+        return {"scale": replicated_spec((d,), "ones"),
+                "bias": replicated_spec((d,), "zeros")}
+    return {"scale": replicated_spec((d,), "ones")}
+
+
+def apply_norm(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        out = out * params["scale"] + params["bias"]
+    else:
+        ms = jnp.mean(xf * xf, -1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + 1e-6) * params["scale"]
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(scale: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """qk-norm: RMS over the head dim (Qwen3 style)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * scale).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ RoPE ----
+
+
+def rope_freqs(cfg: ModelConfig, positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (...,S) → (cos, sin) of shape (..., S, head_dim/2), f32."""
+    half = cfg.head_dim // 2
+    inv = 1.0 / (
+        cfg.rope_theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, H, S, D); cos/sin: (B, S, D/2) — rotate-half convention."""
+    d = x.shape[-1]
+    half = d // 2
+    x1, x2 = x[..., :half], x[..., half : 2 * half]
+    c = cos[:, None, :, :]
+    s = sin[:, None, :, :]
+    r1 = x1 * c - x2 * s
+    r2 = x2 * c + x1 * s
+    if 2 * half == d:
+        return jnp.concatenate([r1, r2], -1).astype(x.dtype)
+    return jnp.concatenate([r1, r2, x[..., 2 * half :]], -1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLP ----
+
+
+def mlp_spec(cfg: ModelConfig, ctx: ShardCtx):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": matrix_spec(ctx, (d, f), tp_dim=1, fsdp_dim=0),
+            "w_up": matrix_spec(ctx, (d, f), tp_dim=1, fsdp_dim=0),
+            "w_down": matrix_spec(ctx, (f, d), tp_dim=0, fsdp_dim=1),
+        }
+    return {
+        "w_up": matrix_spec(ctx, (d, f), tp_dim=1, fsdp_dim=0),
+        "w_down": matrix_spec(ctx, (f, d), tp_dim=0, fsdp_dim=1),
+    }
+
+
+def apply_mlp(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        g = x @ params["w_gate"].astype(dt)
+        u = x @ params["w_up"].astype(dt)
+        h = act(g.astype(jnp.float32)).astype(dt) * u
+    else:
+        u = x @ params["w_up"].astype(dt)
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(dt)
+    return h @ params["w_down"].astype(dt)
+
+
+# ------------------------------------------------------------- embeddings ----
+
+
+def embed_spec(cfg: ModelConfig, ctx: ShardCtx):
+    v = cfg.padded_vocab(ctx.tp)
+    d = cfg.d_model
+    out = {
+        "tok": matrix_spec(ctx, (cfg.n_codebooks, v, d), tp_dim=1, fsdp_dim=2,
+                           init="normal:0.02"),
+    }
+    if not cfg.tie_embeddings:
+        out["head"] = matrix_spec(
+            ctx, (d, cfg.n_codebooks * v), tp_dim=1, fsdp_dim=0, init="normal:0.02"
+        )
+    return out
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens (B, S) or (B, K, S) for multi-codebook audio → (B, S, d)."""
+    dt = compute_dtype(cfg)
+    tok = params["tok"].astype(dt)
+    if cfg.n_codebooks > 1:
+        # (B, K, S): sum codebook embeddings (MusicGen input layer)
+        out = 0.0
+        for kb in range(cfg.n_codebooks):
+            out = out + jnp.take(tok[kb], tokens[:, kb], axis=0)
+        return out
+    return jnp.take(tok[0], tokens, axis=0)
+
+
+def lm_logits(params, cfg: ModelConfig, x: jnp.ndarray, tp: int) -> jnp.ndarray:
+    """x (B,S,d) → logits (B,S,V) (or (B,S,K,V) for multi-codebook)."""
+    v = cfg.padded_vocab(tp)
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        w = params["tok"][0].astype(dt)  # (V, d)
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        logits = x @ params["head"].astype(dt)  # (B,S,K*V)
+    if cfg.n_codebooks > 1:
+        B, S, _ = logits.shape
+        return logits.reshape(B, S, cfg.n_codebooks, v)
+    return logits

@@ -1,0 +1,228 @@
+"""The composable decoder LM: embeds → scanned block-pattern groups → head.
+
+Layers are scanned in groups of ``cfg.block_pattern`` (stacked params along a
+leading ``n_groups`` dim; remainder layers unrolled at the end), with optional
+remat around each group — the memory/compile-time structure 80-layer configs
+need.  Caches (decode) are pytrees stacked the same way and travel through the
+scan as per-layer xs/ys, not carry.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .base import ShardCtx, init_params, stack_tree, tree_index
+from .blocks import block_fwd, block_spec, init_block_cache
+from .layers import compute_dtype, embed_spec, embed_tokens, lm_logits, norm_spec, apply_norm
+
+
+# ------------------------------------------------------------------ params --
+
+
+def model_spec(cfg: ModelConfig, ctx: ShardCtx) -> Dict[str, Any]:
+    n_groups, n_extra = cfg.pattern_groups
+    pattern = cfg.block_pattern
+    spec: Dict[str, Any] = {
+        "embed": embed_spec(cfg, ctx),
+        "final_norm": norm_spec(cfg),
+    }
+    if n_groups > 0:
+        spec["groups"] = {
+            f"p{i}_{btype}": stack_tree(block_spec(btype, cfg, ctx), n_groups)
+            for i, btype in enumerate(pattern)
+        }
+    if n_extra:
+        spec["extra"] = {
+            f"x{i}_{pattern[i % len(pattern)]}": block_spec(
+                pattern[i % len(pattern)], cfg, ctx
+            )
+            for i in range(n_extra)
+        }
+    return spec
+
+
+def init_model(cfg: ModelConfig, ctx: ShardCtx, seed: int = 0):
+    return init_params(model_spec(cfg, ctx), jax.random.PRNGKey(seed))
+
+
+# ------------------------------------------------------------------- cache --
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int):
+    """Stacked per-layer caches matching the scan structure."""
+    n_groups, n_extra = cfg.pattern_groups
+    pattern = cfg.block_pattern
+    cache: Dict[str, Any] = {}
+    if n_groups > 0:
+        cache["groups"] = {
+            f"p{i}_{btype}": jax.tree.map(
+                lambda x: jnp.stack([x] * n_groups),
+                init_block_cache(btype, cfg, batch, capacity),
+                is_leaf=lambda x: isinstance(x, jnp.ndarray),
+            )
+            for i, btype in enumerate(pattern)
+        }
+    if n_extra:
+        cache["extra"] = {
+            f"x{i}_{pattern[i % len(pattern)]}": init_block_cache(
+                pattern[i % len(pattern)], cfg, batch, capacity
+            )
+            for i in range(n_extra)
+        }
+    return cache
+
+
+# ----------------------------------------------------------------- forward --
+
+
+def _constrain(x, mesh, spec):
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, S) or (B, K, S) for multi-codebook
+    ctx: ShardCtx,
+    mesh=None,
+    vis_embeds: Optional[jnp.ndarray] = None,  # (B, n_vis, d) vlm stub input
+    cache=None,
+    start_pos: Optional[jnp.ndarray] = None,
+    remat: bool = False,
+    use_ep: bool = False,
+) -> Tuple[jnp.ndarray, Any, Dict[str, jnp.ndarray]]:
+    """Returns (logits, new_cache, aux_losses)."""
+    dt = compute_dtype(cfg)
+    x = embed_tokens(params["embed"], cfg, tokens).astype(dt)
+    if cfg.n_vis_tokens and vis_embeds is not None:
+        x = jnp.concatenate([vis_embeds.astype(dt), x], axis=1)
+    B, S, _ = x.shape
+    if start_pos is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    else:
+        positions = start_pos + jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    # Sequence parallelism (SP): between blocks the residual stream is also
+    # sharded over the model axis on the sequence dim (Korthikanti et al.) —
+    # cuts the scan-carry/remat memory by tp×; XLA inserts the (all-)gathers
+    # around the ops that need the full sequence.  Decode (S==1) stays
+    # batch-sharded only.
+    seq_sp = mesh is not None and S > 1 and S % ctx.tp == 0 and cache is None
+    dspec = P(
+        ctx.data_spec(), ctx.model_axis if seq_sp else None, None
+    )
+    x = _constrain(x, mesh, dspec)
+
+    n_groups, n_extra = cfg.pattern_groups
+    pattern = cfg.block_pattern
+    aux_total: Dict[str, jnp.ndarray] = {}
+
+    def merge_aux(a):
+        for k, v in a.items():
+            aux_total[k] = aux_total.get(k, 0.0) + v
+
+    if n_groups > 0:
+        group_params = params["groups"]
+        group_cache = cache["groups"] if cache is not None else None
+
+        def group_body(x, xs):
+            gp, gc = xs
+            new_gc = {}
+            auxes = []
+            for i, btype in enumerate(pattern):
+                key = f"p{i}_{btype}"
+                c_in = gc[key] if gc is not None else None
+                x, c_out, aux = block_fwd(
+                    btype, gp[key], cfg, x, positions, ctx,
+                    cache=c_in, use_ep=use_ep, mesh=mesh,
+                )
+                x = _constrain(x, mesh, dspec)
+                if c_out is not None:
+                    new_gc[key] = c_out
+                auxes.append(aux)
+            merged = {}
+            for a in auxes:
+                for k, v in a.items():
+                    merged[k] = merged.get(k, 0.0) + v
+            return x, (new_gc if gc is not None else None, merged)
+
+        body = group_body
+        if remat:
+            body = jax.checkpoint(group_body, prevent_cse=False)
+
+        def scan_body(x, xs):
+            return body(x, xs)
+
+        xs = (group_params, group_cache)
+        x, (new_group_cache, aux_stacked) = jax.lax.scan(scan_body, x, xs)
+        for k, v in aux_stacked.items():
+            aux_total[k] = aux_total.get(k, 0.0) + jnp.sum(v)
+    else:
+        new_group_cache = None
+
+    new_extra = {}
+    if n_extra:
+        for i in range(n_extra):
+            btype = pattern[i % len(pattern)]
+            key = f"x{i}_{btype}"
+            c_in = cache["extra"][key] if cache is not None else None
+            x, c_out, aux = block_fwd(
+                btype, params["extra"][key], cfg, x, positions, ctx,
+                cache=c_in, use_ep=use_ep, mesh=mesh,
+            )
+            merge_aux(aux)
+            if c_out is not None:
+                new_extra[key] = c_out
+
+    x = apply_norm(params["final_norm"], cfg, x)
+    if cfg.n_vis_tokens and vis_embeds is not None:
+        x = x[:, vis_embeds.shape[1]:]  # logits over text positions only
+    logits = lm_logits(params["embed"], cfg, x, ctx.tp)
+    logits = _constrain(
+        logits,
+        mesh,
+        P(ctx.data_spec(), None, ctx.model_axis)
+        if cfg.n_codebooks == 1
+        else P(ctx.data_spec(), None, None, ctx.model_axis),
+    )
+    new_cache = None
+    if cache is not None:
+        new_cache = {}
+        if new_group_cache is not None:
+            new_cache["groups"] = new_group_cache
+        if n_extra:
+            new_cache["extra"] = new_extra
+    return logits, new_cache, aux_total
+
+
+# -------------------------------------------------------------------- loss --
+
+
+def lm_loss(
+    logits: jnp.ndarray,  # (B,S,V) or (B,S,K,V)
+    labels: jnp.ndarray,  # (B,S) or (B,K,S); -100 = ignore
+    vocab: int,
+) -> jnp.ndarray:
+    lf = logits.astype(jnp.float32)
+    if lf.shape[-1] > vocab:  # mask the padded vocab tail out of the softmax
+        pad = jnp.arange(lf.shape[-1]) >= vocab
+        lf = jnp.where(pad, -1e30, lf)
+    if logits.ndim == 4:  # multi-codebook: (B,S,K,V) vs labels (B,K,S)
+        lf = lf.transpose(0, 2, 1, 3)  # (B,K,S,V)
+    mask = labels != -100
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    # gold logits via masked sum (keeps the vocab axis sharded under GSPMD —
+    # take_along_axis would force an all-gather of the logits)
+    vocab_iota = jnp.arange(lf.shape[-1])
+    onehot = (vocab_iota == safe[..., None])
+    gold = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)

@@ -1,0 +1,120 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    r_t = σ(W_r x_t),  i_t = σ(W_i x_t)
+    a_t = exp(-c · softplus(Λ) · r_t)
+    h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+TPU adaptation: the diagonal recurrence is computed with an associative scan
+(log-space first-order linear recurrence) — `jax.lax.associative_scan` maps
+onto the TPU's VPU; there is no CUDA-style persistent-kernel analogue needed.
+Block structure: in_proj → conv1d(width 4) → RG-LRU → gate ⊙ → out_proj.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .base import ParamSpec, ShardCtx, matrix_spec, replicated_spec
+
+
+def rglru_spec(cfg: ModelConfig, ctx: ShardCtx) -> Dict[str, ParamSpec]:
+    r = cfg.rglru
+    d, w = cfg.d_model, r.lru_width
+    return {
+        "in_proj": matrix_spec(ctx, (d, 2 * w), tp_dim=1, fsdp_dim=0),  # (x, gate)
+        "conv_w": replicated_spec((r.conv_width, w), "normal:0.1"),
+        "conv_b": replicated_spec((w,), "zeros"),
+        "lambda_p": replicated_spec((w,), "normal:0.5"),
+        "w_rec_gate": matrix_spec(ctx, (w, w), tp_dim=None, fsdp_dim=0,
+                                  init="normal:0.01"),
+        "w_in_gate": matrix_spec(ctx, (w, w), tp_dim=None, fsdp_dim=0,
+                                 init="normal:0.01"),
+        "out_proj": matrix_spec(ctx, (w, d), tp_dim=0, fsdp_dim=1),
+    }
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class RGLRUCache:
+    h: jnp.ndarray  # (B, W) recurrent state (f32)
+    conv: jnp.ndarray  # (B, cw-1, W)
+    pos: jnp.ndarray
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int) -> RGLRUCache:
+    r = cfg.rglru
+    return RGLRUCache(
+        h=jnp.zeros((batch, r.lru_width), jnp.float32),
+        conv=jnp.zeros((batch, r.conv_width - 1, r.lru_width), jnp.float32),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def _lru_scan(log_a: jnp.ndarray, u: jnp.ndarray, h0: Optional[jnp.ndarray]):
+    """h_t = exp(log_a_t)·h_{t-1} + u_t via associative scan over S.
+
+    log_a, u: (B, S, W) f32.  Returns (h (B,S,W), h_last (B,W)).
+    """
+    if h0 is not None:
+        # fold the initial state into the first input
+        u = u.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(e1, e2):
+        (la1, u1), (la2, u2) = e1, e2
+        return la1 + la2, u2 + jnp.exp(la2) * u1
+
+    la, h = jax.lax.associative_scan(combine, (log_a, u), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_block(
+    params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (B, S, d)
+    cache: Optional[RGLRUCache] = None,
+) -> Tuple[jnp.ndarray, Optional[RGLRUCache]]:
+    r = cfg.rglru
+    B, S, d = x.shape
+    dt = x.dtype
+    proj = x @ params["in_proj"].astype(dt)  # (B,S,2W)
+    u, gate = jnp.split(proj, 2, axis=-1)
+
+    # causal depthwise conv1d on the recurrent branch
+    W = r.conv_width
+    if cache is None:
+        padded = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+        new_conv = None
+    else:
+        padded = jnp.concatenate([cache.conv.astype(dt), u], axis=1)
+        new_conv = padded[:, -(W - 1) :, :].astype(jnp.float32)
+    u = sum(
+        padded[:, i : i + S, :] * params["conv_w"][i][None, None, :]
+        for i in range(W)
+    ) + params["conv_b"]
+
+    uf = u.astype(jnp.float32)
+    rec_gate = jax.nn.sigmoid(uf @ params["w_rec_gate"])
+    in_gate = jax.nn.sigmoid(uf @ params["w_in_gate"])
+    log_lambda = -r.c_constant * jax.nn.softplus(params["lambda_p"])  # (W,) < 0
+    log_a = log_lambda[None, None, :] * rec_gate  # (B,S,W)
+    scaled_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-8)) * (
+        in_gate * uf
+    )
+
+    if cache is None:
+        h, h_last = _lru_scan(log_a, scaled_in, None)
+        new_cache = None
+    elif S == 1:
+        h_new = jnp.exp(log_a[:, 0]) * cache.h + scaled_in[:, 0]
+        h = h_new[:, None, :]
+        new_cache = RGLRUCache(h=h_new, conv=new_conv, pos=cache.pos + S)
+    else:
+        h, h_last = _lru_scan(log_a, scaled_in, cache.h)
+        new_cache = RGLRUCache(h=h_last, conv=new_conv, pos=cache.pos + S)
+
+    out = h.astype(dt) * jax.nn.gelu(gate.astype(jnp.float32)).astype(dt)
+    return out @ params["out_proj"].astype(dt), new_cache

@@ -1,0 +1,155 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060), TPU-adapted.
+
+Train/prefill run the chunked SSD algorithm (`repro.kernels.ssd_chunk`:
+intra-chunk quadratic on the MXU + cheap inter-chunk state scan); decode is
+the O(1) recurrent update  h ← a·h + B xᵀ,  y = C h.
+
+Block structure (Mamba-2): in_proj → (z gate, x, B, C, dt) → causal conv1d on
+(x,B,C) → SSD → gated RMSNorm → out_proj.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops as kops
+from .base import ParamSpec, ShardCtx, matrix_spec, replicated_spec
+
+
+def ssd_dims(cfg: ModelConfig):
+    s = cfg.ssd
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.d_state
+
+
+def ssd_spec(cfg: ModelConfig, ctx: ShardCtx) -> Dict[str, ParamSpec]:
+    s = cfg.ssd
+    d = cfg.d_model
+    di, nh, ns = ssd_dims(cfg)
+    conv_dim = di + 2 * ns  # conv over (x, B, C)
+    return {
+        "in_proj": matrix_spec(
+            ctx, (d, 2 * di + 2 * ns + nh), tp_dim=1, fsdp_dim=0
+        ),
+        "conv_w": replicated_spec((s.conv_width, conv_dim), "normal:0.1"),
+        "conv_b": replicated_spec((conv_dim,), "zeros"),
+        "a_log": replicated_spec((nh,), "zeros"),
+        "dt_bias": replicated_spec((nh,), "zeros"),
+        "d_skip": replicated_spec((nh,), "ones"),
+        "norm_scale": replicated_spec((di,), "ones"),
+        "out_proj": matrix_spec(ctx, (di, d), tp_dim=0, fsdp_dim=1),
+    }
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class SSDCache:
+    h: jnp.ndarray  # (B, H, N, P) recurrent state
+    conv: jnp.ndarray  # (B, W-1, conv_dim) conv tail
+    pos: jnp.ndarray  # scalar
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int) -> SSDCache:
+    di, nh, ns = ssd_dims(cfg)
+    s = cfg.ssd
+    return SSDCache(
+        h=jnp.zeros((batch, nh, ns, s.head_dim), jnp.float32),
+        conv=jnp.zeros((batch, s.conv_width - 1, di + 2 * ns), jnp.float32),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    di, nh, ns = ssd_dims(cfg)
+    z, x, b, c, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + ns, 2 * di + 2 * ns], axis=-1
+    )
+    return z, x, b, c, dt
+
+
+def _causal_conv(cfg: ModelConfig, u: jnp.ndarray, w: jnp.ndarray, bias) -> jnp.ndarray:
+    """u (B,S,C), depthwise causal conv width W."""
+    W = cfg.ssd.conv_width
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + u.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    return jax.nn.silu((out + bias).astype(jnp.float32)).astype(u.dtype)
+
+
+def ssd_block(
+    params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (B, S, d)
+    cache: Optional[SSDCache] = None,
+) -> Tuple[jnp.ndarray, Optional[SSDCache]]:
+    s = cfg.ssd
+    B, S, d = x.shape
+    di, nh, ns = ssd_dims(cfg)
+    dt_ = x.dtype
+    proj = x @ params["in_proj"].astype(dt_)
+    z, xs, bmat, cmat, dt_raw = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)  # (B,S,di+2ns)
+    if cache is None:
+        conv_out = _causal_conv(cfg, conv_in, params["conv_w"], params["conv_b"])
+        new_conv = None
+    else:
+        full = jnp.concatenate([cache.conv.astype(dt_), conv_in], axis=1)
+        W = s.conv_width
+        out = sum(
+            full[:, i : i + S, :] * params["conv_w"][i][None, None, :]
+            for i in range(W)
+        )
+        conv_out = jax.nn.silu(
+            (out + params["conv_b"]).astype(jnp.float32)
+        ).astype(dt_)
+        new_conv = full[:, -(W - 1) :, :].astype(jnp.float32)
+
+    xs, bmat, cmat = jnp.split(conv_out, [di, di + ns], axis=-1)
+    dt_act = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (H,) negative decay rates
+    log_a = dt_act * a[None, None, :]  # (B,S,H) log decays
+    xh = xs.reshape(B, S, nh, s.head_dim)
+    xh_dt = xh.astype(jnp.float32) * dt_act[..., None]  # dt-scaled input
+
+    if cache is None or S > 1:
+        # chunked SSD over the sequence (vmap over batch).  With a cache and
+        # S > 1 this is *prefill*: starts from the empty state and records the
+        # final state (prefill always begins at pos 0).
+        def one(bx, bla, bb, bc):
+            chunk = s.chunk if S % min(s.chunk, S) == 0 else 1
+            return kops.ssd_scan(bx, bla, bb, bc, chunk=min(chunk, S))
+
+        y, h_fin = jax.vmap(one)(
+            xh_dt.astype(dt_), log_a, bmat, cmat
+        )  # (B,S,H,P)
+        new_cache = (
+            None
+            if cache is None
+            else SSDCache(h=h_fin, conv=new_conv, pos=cache.pos + S)
+        )
+    else:
+        # single-step recurrence
+        a_step = jnp.exp(log_a[:, 0])  # (B,H)
+        outer = jnp.einsum("bn,bhp->bhnp", bmat[:, 0].astype(jnp.float32),
+                           xh_dt[:, 0])
+        h_new = a_step[..., None, None] * cache.h + outer
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32), h_new)
+        y = y[:, None].reshape(B, 1, nh, s.head_dim)
+        new_cache = SSDCache(h=h_new, conv=new_conv, pos=cache.pos + S)
+
+    y = y.astype(jnp.float32) + params["d_skip"][None, None, :, None] * xh.astype(
+        jnp.float32
+    )
+    y = y.reshape(B, S, di)
+    # gated RMSNorm (Mamba-2): norm(y * silu(z))
+    gated = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(gated * gated, -1, keepdims=True)
+    y = gated * jax.lax.rsqrt(ms + 1e-6) * params["norm_scale"]
+    return (y.astype(dt_) @ params["out_proj"].astype(dt_)), new_cache

@@ -1,0 +1,3 @@
+"""repro.serve — prefill/decode serving + opportunistic sessions."""
+from .engine import greedy_generate, make_serve_fns
+from .session import OpportunisticServer

@@ -1,0 +1,73 @@
+"""Serving steps: prefill + batched decode over the model zoo.
+
+``make_serve_fns`` builds the jit'd (prefill, decode) pair used by the
+examples, the serving session (`repro.serve.session`), and the dry-run's
+``serve_step`` lowering (decode_32k / long_500k cells).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.base import ShardCtx
+from ..models.lm import forward, init_cache
+
+
+def make_serve_fns(
+    cfg: ModelConfig, ctx: ShardCtx, mesh=None, capacity: int = 2048,
+    use_ep: bool = False,
+):
+    """Returns (prefill_fn, decode_fn, new_cache_fn).
+
+    prefill_fn(params, tokens)            -> (last_logits, cache)
+    decode_fn(params, cache, tokens, pos) -> (logits, cache)
+    """
+
+    def prefill(params, tokens):
+        B = tokens.shape[0]
+        cache = init_cache(cfg, B, capacity)
+        logits, cache, _ = forward(
+            params, cfg, tokens, ctx, mesh=mesh, cache=cache,
+            start_pos=jnp.zeros((), jnp.int32), use_ep=use_ep,
+        )
+        return logits[:, -1], cache
+
+    def decode(params, cache, tokens, pos):
+        logits, cache, _ = forward(
+            params, cfg, tokens, ctx, mesh=mesh, cache=cache,
+            start_pos=pos, use_ep=use_ep,
+        )
+        return logits[:, -1], cache
+
+    def new_cache(batch):
+        return init_cache(cfg, batch, capacity)
+
+    return prefill, decode, new_cache
+
+
+def greedy_generate(
+    cfg: ModelConfig,
+    params,
+    prefill_fn,
+    decode_fn,
+    prompt: jnp.ndarray,  # (B, S0) or (B, K, S0)
+    n_tokens: int,
+) -> jnp.ndarray:
+    """Greedy decoding loop (host-driven; the session layer preempts between
+    steps — each decode step is one preemption quantum)."""
+    logits, cache = prefill_fn(params, prompt)
+    s0 = prompt.shape[-1]
+    outs = []
+    multi = cfg.n_codebooks > 1
+    for t in range(n_tokens):
+        nxt = jnp.argmax(logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)
+        outs.append(nxt)
+        step_tok = nxt[:, :, None] if multi else nxt[:, None]
+        logits, cache = decode_fn(
+            params, cache, step_tok, jnp.asarray(s0 + t, jnp.int32)
+        )
+    return jnp.stack(outs, axis=-1)

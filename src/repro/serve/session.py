@@ -1,0 +1,167 @@
+"""Opportunistic serving sessions — the paper's technique as a first-class
+feature of the ML-serving layer (DESIGN.md §2.3, §Arch-applicability).
+
+Mapping of the paper's concepts onto interactive LLM serving:
+
+| paper                     | serving                                        |
+|---------------------------|------------------------------------------------|
+| interaction               | a user request (prefill + N decode steps)      |
+| think time                | the gap between user requests                  |
+| non-critical operators    | anticipated prompts' prefills, batch jobs      |
+| partition (preempt quantum)| one prefill chunk / one decode step           |
+| materialised-result cache | prefix KV caches (Eq 2/3 eviction!)            |
+| CSE / idempotence         | identical prompt → same prefill node           |
+| speculative materialisation| warming caches for *predicted* next prompts   |
+
+A request whose prompt was speculatively prefilled during think time starts
+decoding immediately — the serving analogue of Figure 1(b).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.dag import Node
+from ..core.engine import Engine
+from ..core.executor import OpRuntime, Unit
+from ..models.base import ShardCtx
+from .engine import make_serve_fns
+
+
+@dataclass
+class GenResult:
+    tokens: np.ndarray
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.tokens.nbytes)
+
+
+class CacheResult:
+    """A prefix KV cache as a cacheable value (Eq 2/3 sees its true size)."""
+
+    def __init__(self, logits, cache, prompt_len: int):
+        self.logits = logits
+        self.cache = cache
+        self.prompt_len = prompt_len
+
+    @property
+    def nbytes(self) -> int:
+        return int(
+            sum(x.nbytes for x in jax.tree.leaves((self.logits, self.cache)))
+        )
+
+
+class OpportunisticServer:
+    """Single-model interactive server scheduled by the core engine."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        engine: Optional[Engine] = None,
+        capacity: int = 256,
+        prefill_chunk: int = 32,
+        step_cost_s: float = 0.05,   # simulated per-decode-step latency
+        prefill_cost_s: float = 0.02,  # simulated per-chunk latency
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.engine = engine or Engine(mode="sim", budget_bytes=1 << 30)
+        self.ctx = ShardCtx()
+        self.prefill_chunk = prefill_chunk
+        self.step_cost_s = step_cost_s
+        self.prefill_cost_s = prefill_cost_s
+        self.capacity = capacity
+        self._prefill, self._decode, self._new_cache = make_serve_fns(
+            cfg, self.ctx, capacity=capacity
+        )
+        self._register_ops()
+
+    # ------------------------------------------------------------- op defs --
+    def _register_ops(self) -> None:
+        eng = self.engine
+
+        def prefill_units(node: Node, inputs) -> List[Unit]:
+            prompt = np.asarray(node.literals[0], np.int32)[None, :]
+            chunks = range(0, prompt.shape[1], self.prefill_chunk)
+
+            def chunk_fn(a):
+                def run():
+                    return ("chunk", a)  # chunk markers; compute in combine
+                return run
+
+            # chunked prefill: each chunk is a preemption quantum
+            return [
+                Unit(fn=chunk_fn(a), cost_s=self.prefill_cost_s,
+                     tag=f"prefill[{a}]")
+                for a in chunks
+            ]
+
+        def prefill_combine(node: Node, inputs, results):
+            prompt = jnp.asarray(
+                np.asarray(node.literals[0], np.int32)[None, :]
+            )
+            logits, cache = self._prefill(self.params, prompt)
+            return CacheResult(logits, cache, prompt.shape[1])
+
+        eng.register_op(
+            "prefill", OpRuntime(units=prefill_units, combine=prefill_combine)
+        )
+
+        def gen_units(node: Node, inputs) -> List[Unit]:
+            n = int(node.literals[0])
+            return [
+                Unit(fn=lambda: None, cost_s=self.step_cost_s, tag=f"dec[{t}]")
+                for t in range(n)
+            ]
+
+        def gen_combine(node: Node, inputs, results):
+            pre: CacheResult = inputs[0]
+            n = int(node.literals[0])
+            logits, cache = pre.logits, pre.cache
+            outs = []
+            pos = pre.prompt_len
+            for t in range(n):
+                nxt = jnp.argmax(
+                    logits[..., : self.cfg.vocab], axis=-1
+                ).astype(jnp.int32)
+                outs.append(np.asarray(nxt))
+                logits, cache = self._decode(
+                    self.params, cache, nxt[:, None],
+                    jnp.asarray(pos + t, jnp.int32),
+                )
+            return GenResult(np.stack(outs, -1)[0])
+
+        eng.register_op(
+            "generate", OpRuntime(units=gen_units, combine=gen_combine)
+        )
+
+    # ---------------------------------------------------------------- API --
+    def _prefill_node(self, prompt: Sequence[int]) -> Node:
+        return self.engine.add("prefill", literals=[tuple(int(t) for t in prompt)])
+
+    def request(self, prompt: Sequence[int], n_tokens: int = 8) -> GenResult:
+        """A user request — an *interaction*: preempts background work, runs
+        only its critical path (prefill reused if speculatively warmed)."""
+        pre = self._prefill_node(prompt)
+        gen = self.engine.add("generate", parents=[pre], literals=[int(n_tokens)])
+        return self.engine.display(gen)
+
+    def anticipate(self, prompt: Sequence[int]) -> Node:
+        """Register a *predicted* future prompt: its prefill becomes a
+        non-critical operator the scheduler may run during think time
+        (speculative materialisation of the prefix cache)."""
+        return self._prefill_node(prompt)
+
+    def think(self, seconds: float) -> dict:
+        return self.engine.think(seconds)
+
+    @property
+    def metrics(self):
+        return self.engine.metrics

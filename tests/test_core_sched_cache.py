@@ -1,0 +1,140 @@
+"""Scheduler (Eq 1/4) and cache eviction (Eq 2/3) unit tests."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DAG,
+    CostModel,
+    InteractionPredictor,
+    MaterializedCache,
+    Scheduler,
+    ThinkTimeModel,
+)
+
+
+class _Blob:
+    def __init__(self, nbytes):
+        self.nbytes = nbytes
+
+
+def _chain_dag():
+    """r -> a(cost 10) -> b(cost 1); r -> c(cost 2). All costs explicit."""
+    d = DAG()
+    r = d.add("synthetic", kwargs={"cost_s": 1.0, "tag": "r"})
+    a = d.add("synthetic", [r], kwargs={"cost_s": 10.0, "tag": "a"})
+    b = d.add("synthetic", [a], kwargs={"cost_s": 1.0, "tag": "b"})
+    c = d.add("synthetic", [r], kwargs={"cost_s": 2.0, "tag": "c"})
+    return d, (r, a, b, c)
+
+
+def test_delivery_cost_definition():
+    d, (r, a, b, c) = _chain_dag()
+    cm = CostModel()
+    # c_b with nothing executed = cost(b)+cost(a)+cost(r)
+    assert cm.delivery_cost(b, set()) == pytest.approx(12.0)
+    assert cm.delivery_cost(b, {r.nid}) == pytest.approx(11.0)
+    assert cm.delivery_cost(b, {r.nid, a.nid}) == pytest.approx(1.0)
+    assert cm.delivery_cost(b, {b.nid}) == 0.0
+
+
+def test_utility_eq1_prefers_influential_source():
+    d, (r, a, b, c) = _chain_dag()
+    cm = CostModel()
+    s = Scheduler(dag=d, cost_model=cm, policy="utility")
+    # only source initially is r (Eq 1 sums delivery costs of all descendants)
+    assert s.pick(set()).nid == r.nid
+    # after r: sources are a and c. U(a)=c_a+c_b=10+11=21 > U(c)=2
+    assert s.pick({r.nid}).nid == a.nid
+
+
+def test_utility_eq4_uses_interaction_probability():
+    d, (r, a, b, c) = _chain_dag()
+    cm = CostModel()
+    pred = InteractionPredictor(uniform_p=0.5)
+    # train: 'a'-class ops are never followed by interactions, 'c' always
+    pred._next_counts["synthetic"]  # default untouched
+    s = Scheduler(dag=d, cost_model=cm, predictor=pred, policy="utility_p")
+    # with uniform p the ordering matches Eq 1
+    assert s.pick({r.nid}).nid == a.nid
+
+
+def test_policies_differ():
+    d, (r, a, b, c) = _chain_dag()
+    cm = CostModel()
+    fifo = Scheduler(dag=d, cost_model=cm, policy="fifo")
+    cheap = Scheduler(dag=d, cost_model=cm, policy="cheapest")
+    assert fifo.pick({r.nid}).nid == a.nid  # a specified before c
+    assert cheap.pick({r.nid}).nid == c.nid
+
+
+def test_cache_eq2_recency_probability():
+    d, (r, a, b, c) = _chain_dag()
+    cm = CostModel()
+    cache = MaterializedCache(budget_bytes=10_000, cost_model=cm)
+    cache.put(r, _Blob(100))
+    cache.put(a, _Blob(100))
+    e_r = cache._entries[r.nid]
+    e_a = cache._entries[a.nid]
+    cache.get(a)  # reuse bumps T and t_a
+    assert cache._p(e_a) == pytest.approx(1.0)  # 1/(T+1-t) = 1/1
+    assert cache._p(e_r) < cache._p(e_a)
+
+
+def test_gc_triggers_at_threshold_and_paper_eq3_order():
+    d, (r, a, b, c) = _chain_dag()
+    cm = CostModel()
+    cache = MaterializedCache(
+        budget_bytes=1000, cost_model=cm, policy="paper_eq3", gc_threshold=0.8
+    )
+    cache.put(r, _Blob(300))  # k_r = 1
+    cache.put(a, _Blob(300))  # k_a = 10 (r cached)
+    assert cache.used_bytes == 600  # under 800: no GC
+    cache.put(c, _Blob(300))  # 900 > 800 → evict
+    # Eq3 scores: O = p*m/k → r: m/k=300, a: 30, c: 150 (equal p at insert
+    # time ordering differs by t); lowest O evicted first = a
+    assert a.nid not in cache
+    assert r.nid in cache and c.nid in cache
+
+
+def test_corrected_policy_evicts_cheap_large_first():
+    d, (r, a, b, c) = _chain_dag()
+    cm = CostModel()
+    cache = MaterializedCache(
+        budget_bytes=1000, cost_model=cm, policy="corrected", gc_threshold=0.8
+    )
+    cache.put(r, _Blob(300))
+    cache.put(a, _Blob(300))
+    cache.put(c, _Blob(300))
+    # corrected: O = p*k/m → r: 1/300, a: 10/300, c: 2/300 → evict r first...
+    # but r is an ancestor needed by nothing cached? eviction is utility-only:
+    assert r.nid not in cache
+    assert a.nid in cache
+
+
+def test_pinned_entries_survive_gc():
+    d, (r, a, b, c) = _chain_dag()
+    cm = CostModel()
+    cache = MaterializedCache(budget_bytes=1000, cost_model=cm, gc_threshold=0.8)
+    cache.put(r, _Blob(500))
+    cache.pin(r.nid)
+    cache.put(a, _Blob(500))
+    assert r.nid in cache  # pinned survives even though over budget
+    cache.unpin(r.nid)
+
+
+def test_thinktime_model_prior_and_update():
+    m = ThinkTimeModel()
+    assert m.quantile(0.75) == pytest.approx(23.0, rel=0.05)
+    assert m.median() == pytest.approx(6.0, rel=0.05)
+    for _ in range(500):
+        m.update(2.0)
+    assert m.median() < 3.0  # adapts to the fast user
+    # hazard is positive and finite
+    assert 0 < m.hazard_after(5.0) < 10
+
+
+def test_thinktime_sampling_deterministic():
+    m = ThinkTimeModel()
+    r1 = m.sample(np.random.default_rng(0), 5)
+    r2 = m.sample(np.random.default_rng(0), 5)
+    assert np.allclose(r1, r2)

@@ -1,0 +1,163 @@
+"""Frame operator correctness against numpy oracles; partition invariance."""
+import numpy as np
+import pytest
+
+from conftest import table_as_numpy
+from repro.frame import Session
+
+
+def _np_small(catalog):
+    return table_as_numpy(catalog, "small")
+
+
+def test_filter_matches_numpy(session, catalog):
+    df = session.read_table("small")
+    out = df[df["x"] > 5.0].collect().to_pydict()
+    ref = _np_small(catalog)
+    keep = ref["x"] > 5.0
+    np.testing.assert_allclose(out["x"], ref["x"][keep], rtol=1e-6)
+    assert len(out["x"]) == keep.sum()
+
+
+def test_filter_null_semantics(session, catalog):
+    # comparisons with null are False (pandas semantics)
+    df = session.read_table("small")
+    out = df[df["y"] > 0.5].collect().to_pydict()
+    ref = _np_small(catalog)
+    y = ref["y"]
+    keep = ~np.isnan(y) & (np.nan_to_num(y) > 0.5)
+    assert len(out["y"]) == keep.sum()
+
+
+def test_assign_and_udf(session, catalog):
+    df = session.read_table("small")
+    df["z"] = df["x"] * 2.0 + 1.0
+    df["w"] = df["x"].apply(lambda v: v**2)
+    out = df.collect().to_pydict()
+    ref = _np_small(catalog)
+    np.testing.assert_allclose(out["z"], ref["x"] * 2 + 1, rtol=1e-6)
+    np.testing.assert_allclose(out["w"], ref["x"] ** 2, rtol=1e-5)
+
+
+def test_fillna_with_scalar_subexpression(session, catalog):
+    df = session.read_table("small")
+    m = df["y"].mean()
+    df["y"] = df["y"].fillna(m)
+    out = df.collect().to_pydict()
+    ref = _np_small(catalog)["y"]
+    mean = np.nanmean(ref)
+    expect = np.where(np.isnan(ref), mean, ref)
+    np.testing.assert_allclose(out["y"], expect, rtol=1e-5)
+
+
+def test_describe_matches_numpy(session, catalog):
+    df = session.read_table("small")
+    out = session.show(df.describe()).to_pydict()
+    ref = _np_small(catalog)
+    stats = {s: i for i, s in enumerate(out["stat"])}
+    x = ref["x"]
+    assert out["x"][stats["count"]] == pytest.approx(len(x))
+    assert out["x"][stats["mean"]] == pytest.approx(x.mean(), rel=1e-5)
+    assert out["x"][stats["std"]] == pytest.approx(x.std(ddof=1), rel=1e-4)
+    y = ref["y"]
+    assert out["y"][stats["count"]] == pytest.approx((~np.isnan(y)).sum())
+    assert out["y"][stats["mean"]] == pytest.approx(np.nanmean(y), rel=1e-5)
+
+
+def test_groupby_agg_matches_numpy(session, catalog):
+    df = session.read_table("small")
+    out = df.groupby("k").agg({"x": "sum", "y": "mean", "i": "count"}).collect()
+    d = out.to_pydict()
+    ref = _np_small(catalog)
+    for row, key in enumerate(d["k"]):
+        sel = ref["k"] == key
+        assert d["x"][row] == pytest.approx(ref["x"][sel].sum(), rel=1e-5)
+        assert d["y"][row] == pytest.approx(np.nanmean(ref["y"][sel]), rel=1e-5)
+        assert d["i"][row] == pytest.approx(sel.sum())
+
+
+def test_groupby_callable_udf(session, catalog):
+    df = session.read_table("small")
+    out = df[["k", "x"]].groupby("k").agg(lambda v: float(np.median(v))).collect()
+    d = out.to_pydict()
+    ref = _np_small(catalog)
+    for row, key in enumerate(d["k"]):
+        sel = ref["k"] == key
+        assert d["x"][row] == pytest.approx(np.median(ref["x"][sel]), rel=1e-5)
+
+
+def test_sort_values_and_topk_fastpath(session, catalog):
+    df = session.read_table("small")
+    full = df.sort_values("x", ascending=False).collect().to_pydict()
+    ref = np.sort(_np_small(catalog)["x"])[::-1]
+    np.testing.assert_allclose(full["x"], ref, rtol=1e-6)
+    # head over unexecuted sort → top-k fast path
+    s2 = Session(catalog=catalog, mode="sim")
+    df2 = s2.read_table("small")
+    top = s2.show(df2.sort_values("x", ascending=False).head(10))
+    np.testing.assert_allclose(top.column("x"), ref[:10], rtol=1e-6)
+    assert s2.engine.metrics.interactions[-1].partial
+
+
+def test_value_counts(session, catalog):
+    df = session.read_table("small")
+    out = session.show(df["k"].value_counts()).to_pydict()
+    ref = _np_small(catalog)["k"]
+    values, counts = np.unique(ref.astype(str), return_counts=True)
+    got = dict(zip(out["k"], out["count"]))
+    for v, c in zip(values, counts):
+        assert got[v] == c
+    # sorted descending by count
+    assert list(out["count"]) == sorted(out["count"], reverse=True)
+
+
+def test_join_broadcast(session, catalog):
+    df = session.read_table("small")
+    dim = session.read_table("dim")
+    out = df.join(dim, on="j").collect().to_pydict()
+    ref = _np_small(catalog)
+    dimref = table_as_numpy(catalog, "dim")
+    w_by_key = dict(zip(dimref["j"], dimref["w"]))
+    assert len(out["j"]) == len(ref["j"])  # all keys 0..6 present in dim
+    np.testing.assert_allclose(
+        out["w"], [w_by_key[j] for j in out["j"]], rtol=1e-6
+    )
+
+
+def test_dropna_and_drop_sparse_cols(session, catalog):
+    df = session.read_table("small")
+    kept = df.dropna(subset=["y"]).collect()
+    ref = _np_small(catalog)
+    assert kept.nrows == (~np.isnan(ref["y"])).sum()
+    # y has 20% nulls → dropped at thresh 0.9; x fully valid → kept
+    slim = df.drop_sparse_cols(0.9).collect()
+    assert "y" not in slim.column_names
+    assert "x" in slim.column_names
+
+
+def test_columns_without_materialisation(session, catalog):
+    df = session.read_table("large")
+    cols = session.show(df.columns)
+    assert list(cols) == ["a", "b"]
+    # the 18.5s read must NOT have run for a metadata interaction
+    assert session.engine.metrics.interactions[-1].latency_s < 0.1
+    assert df.node.nid not in session.engine.cache
+
+
+def test_partition_invariance(catalog):
+    """Same results regardless of partitioning (paper §5.1 requirement)."""
+    from repro.frame.partitioner import uniform_partitions
+
+    results = []
+    for nparts in (1, 3, 11):
+        s = Session(catalog=catalog, mode="sim")
+        df = s.read_table("small")
+        # override the partition plan
+        spec = catalog.spec("small")
+        df.node.kwargs["partition_bounds"] = uniform_partitions(spec.nrows, nparts)
+        df["z"] = df["x"] * 3.0
+        out = df[df["z"] > 15.0].groupby("k").agg({"z": "mean"}).collect()
+        results.append(out.to_pydict())
+    for other in results[1:]:
+        assert list(other["k"]) == list(results[0]["k"])
+        np.testing.assert_allclose(other["z"], results[0]["z"], rtol=1e-5)

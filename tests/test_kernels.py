@@ -1,0 +1,144 @@
+"""Pallas kernel validation: shape/dtype sweeps vs. the ref.py oracles.
+
+Kernels run in interpret mode (CPU container; Mosaic targets real TPUs).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as R
+from repro.kernels.filter_compact import filter_compact
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.masked_stats import masked_stats
+from repro.kernels.segment_reduce import segment_reduce
+from repro.kernels.ssd_chunk import ssd_chunk_scan
+from repro.kernels.topk import topk
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------- attention --
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (1, 2, 2, 128, 64),    # MHA
+    (2, 8, 2, 256, 64),    # GQA 4:1
+    (1, 4, 1, 256, 128),   # MQA
+    (1, 3, 1, 128, 64),    # odd head count
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Hq, Hkv, S, D, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, Hq, S, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, D)), dtype)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = R.attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None), (True, 64), (True, 128)])
+def test_flash_attention_masks(causal, window):
+    B, Hq, Hkv, S, D = 1, 4, 2, 256, 64
+    q = jnp.asarray(RNG.normal(size=(B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window, interpret=True)
+    ref = R.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_attention_decode_offset():
+    """Sq=1 decode against a long KV cache with q_offset."""
+    B, Hq, Hkv, S, D = 2, 4, 4, 512, 64
+    q = jnp.asarray(RNG.normal(size=(B, Hq, 1, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, q_offset=S - 1, interpret=True)
+    ref = R.attention_ref(q, k, v, causal=True, q_offset=S - 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# ------------------------------------------------------------- segment_reduce --
+@pytest.mark.parametrize("n,nb", [(100, 7), (3000, 37), (5000, 200), (512, 128)])
+@pytest.mark.parametrize("mode", ["sum", "min", "max"])
+def test_segment_reduce_sweep(n, nb, mode):
+    keys = jnp.asarray(RNG.integers(0, nb, n), jnp.int32)
+    vals = jnp.asarray(RNG.normal(size=n), jnp.float32)
+    valid = jnp.asarray(RNG.uniform(size=n) > 0.25)
+    out, cnt = segment_reduce(keys, vals, valid, nb, mode=mode, interpret=True)
+    rout, rcnt = R.segment_reduce_ref(keys, vals, valid, nb, mode=mode)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(rout), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cnt), np.asarray(rcnt))
+
+
+def test_segment_reduce_empty_buckets():
+    keys = jnp.asarray([0, 0, 5], jnp.int32)
+    vals = jnp.asarray([1.0, 2.0, 3.0], jnp.float32)
+    valid = jnp.ones(3, bool)
+    out, cnt = segment_reduce(keys, vals, valid, 8, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), [3, 0, 0, 0, 0, 3, 0, 0])
+
+
+# --------------------------------------------------------------- masked_stats --
+@pytest.mark.parametrize("n", [10, 1000, 4096, 5001])
+@pytest.mark.parametrize("null_frac", [0.0, 0.3])
+def test_masked_stats_sweep(n, null_frac):
+    x = jnp.asarray(RNG.normal(size=n) * 10, jnp.float32)
+    m = jnp.asarray(RNG.uniform(size=n) >= null_frac)
+    out = masked_stats(x, m, interpret=True)
+    ref = R.masked_stats_ref(x, m)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-2
+    )
+
+
+# -------------------------------------------------------------- filter_compact --
+@pytest.mark.parametrize("n", [64, 1000, 4096])
+@pytest.mark.parametrize("sel", [0.0, 0.5, 1.0])
+def test_filter_compact_sweep(n, sel):
+    x = jnp.asarray(RNG.normal(size=n), jnp.float32)
+    keep = jnp.asarray(RNG.uniform(size=n) < sel)
+    out, cnt = filter_compact(x, keep, interpret=True)
+    rout, rcnt = R.filter_compact_ref(x, keep)
+    assert int(cnt) == int(rcnt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(rout), atol=1e-6)
+
+
+# ------------------------------------------------------------------------ topk --
+@pytest.mark.parametrize("n,k", [(100, 1), (4000, 7), (4000, 64), (999, 10)])
+@pytest.mark.parametrize("largest", [True, False])
+def test_topk_sweep(n, k, largest):
+    x = jnp.asarray(RNG.normal(size=n), jnp.float32)
+    out = topk(x, k, largest=largest, interpret=True)
+    ref = R.topk_ref(x, k, largest=largest)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref))
+
+
+# ------------------------------------------------------------------------- ssd --
+@pytest.mark.parametrize("S,H,P,N,chunk", [
+    (128, 2, 16, 16, 32),
+    (256, 4, 32, 16, 64),
+    (256, 1, 64, 32, 128),
+])
+def test_ssd_chunk_sweep(S, H, P, N, chunk):
+    x = jnp.asarray(RNG.normal(size=(S, H, P)) * 0.5, jnp.float32)
+    la = jnp.asarray(-np.abs(RNG.normal(size=(S, H))) * 0.1, jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(S, N)) * 0.3, jnp.float32)
+    c = jnp.asarray(RNG.normal(size=(S, N)) * 0.3, jnp.float32)
+    y, h = ssd_chunk_scan(x, la, b, c, chunk=chunk, interpret=True)
+    ry, rh = R.ssd_ref(x, la, b, c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ry), atol=3e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(rh), atol=3e-3)
+
+
+def test_ssd_chunk_invariance():
+    """Chunk size must not change the result (state-passing correctness)."""
+    S, H, P, N = 256, 2, 16, 16
+    x = jnp.asarray(RNG.normal(size=(S, H, P)) * 0.5, jnp.float32)
+    la = jnp.asarray(-np.abs(RNG.normal(size=(S, H))) * 0.1, jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(S, N)) * 0.3, jnp.float32)
+    c = jnp.asarray(RNG.normal(size=(S, N)) * 0.3, jnp.float32)
+    y64, _ = ssd_chunk_scan(x, la, b, c, chunk=64, interpret=True)
+    y128, _ = ssd_chunk_scan(x, la, b, c, chunk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(y64), np.asarray(y128), atol=2e-3)

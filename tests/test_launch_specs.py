@@ -1,0 +1,68 @@
+"""Launch-layer invariants: input specs, cache shardings, cell registry."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, all_cells, get_config, get_shape
+from repro.launch.specs import decode_input_specs, train_input_specs
+from repro.models.base import ShardCtx
+
+CTX = ShardCtx(tp=16, dp=16)
+
+
+def test_all_cells_skips_long500k_for_quadratic_archs():
+    cells = all_cells()
+    assert len(cells) == 33  # 10×3 + 3 sub-quadratic long_500k
+    long_archs = {a for a, s in cells if s == "long_500k"}
+    assert long_archs == {"h2o_danube_3_4b", "recurrentgemma_9b", "mamba2_2p7b"}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_specs_shard_batch_and_match_shapes(arch):
+    cfg = get_config(arch)
+    shape = get_shape("train_4k")
+    shapes, specs = train_input_specs(cfg, shape, CTX)
+    assert shapes["tokens"].shape[0] == shape.global_batch
+    assert specs["tokens"][0] == "data"  # batch sharded over data
+    if cfg.n_vis_tokens:
+        assert "vis_embeds" in shapes
+        assert shapes["vis_embeds"].shape == (
+            shape.global_batch, cfg.n_vis_tokens, cfg.d_model
+        )
+    if cfg.n_codebooks > 1:
+        assert shapes["tokens"].shape[1] == cfg.n_codebooks
+
+
+@pytest.mark.parametrize("arch", ["qwen3_8b", "mamba2_2p7b", "recurrentgemma_9b"])
+def test_decode_cache_specs_leafwise_valid(arch):
+    """Every cache leaf gets a PartitionSpec of matching rank; sharded dims
+    divide evenly on the 16×16 mesh."""
+    cfg = get_config(arch)
+    shape = get_shape("decode_32k")
+    shapes, specs = decode_input_specs(cfg, shape, CTX)
+    leaves_s = jax.tree.leaves(shapes["cache"])
+    leaves_p = jax.tree.leaves(
+        specs["cache"], is_leaf=lambda x: isinstance(x, P)
+    )
+    assert len(leaves_s) == len(leaves_p)
+    for sds, spec in zip(leaves_s, leaves_p):
+        assert len(spec) <= len(sds.shape)
+        for dim, ax in zip(sds.shape, tuple(spec)):
+            if ax is None:
+                continue
+            parts = 16  # both 'data' and 'model' are 16-way
+            assert dim % parts == 0, (arch, sds.shape, tuple(spec))
+
+
+def test_long500k_batch1_replicated():
+    cfg = get_config("mamba2_2p7b")
+    shape = get_shape("long_500k")
+    shapes, specs = decode_input_specs(cfg, shape, CTX)
+    assert tuple(specs["tokens"])[0] is None  # batch=1 cannot shard
+
+
+def test_registry_aliases_resolve():
+    for alias in ("qwen3-moe-30b-a3b", "mamba2-2.7b", "h2o-danube-3-4b"):
+        cfg = get_config(alias)
+        assert cfg.name == alias
