@@ -1,0 +1,166 @@
+"""Columnar kernel backend comparison on the paper's blocking-operator partials.
+
+Measures the per-partition *partial* computations (the think-time preemption
+quanta of paper §5.1) under each CPU-capable frame backend:
+
+* ``numpy``     — the scalar host reference in `repro.frame.blocking`,
+* ``xla``       — the jit'd jnp kernel math (`repro.kernels.ref`),
+* ``interpret`` — the Pallas kernels in interpret mode (correctness path;
+                  orders of magnitude slower on CPU, so it runs at a reduced
+                  row count recorded alongside its timing).
+
+Writes ``BENCH_backends.json`` and demonstrates the cost-model calibration
+workflow: every measurement is fed to ``CostModel.add_sample`` and the fitted
+per-(op, backend) unit costs are included in the report, ready to drive
+virtual-clock simulations with backend-faithful costs.
+
+Run:  PYTHONPATH=src python benchmarks/bench_backends.py [--nrows 1000000]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Callable, Dict
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.costmodel import CostModel
+from repro.frame import backend as BK
+from repro.frame import from_pydict
+from repro.frame.table import Partition
+
+N_CATEGORIES = 64
+# the paper's canonical blocking interaction: df.groupby(k).mean() (Fig. 2)
+AGGS = (
+    ("x", "x", "mean"),
+    ("y", "y", "mean"),
+    ("z", "z", "mean"),
+)
+
+
+def make_partition(nrows: int, seed: int = 0) -> Partition:
+    rng = np.random.default_rng(seed)
+    y = rng.uniform(0.0, 10.0, nrows)
+    y[rng.random(nrows) < 0.2] = np.nan
+    cats = np.array([f"c{i:03d}" for i in range(N_CATEGORIES)])
+    # f32 columns: the storage dtype an accelerated engine would pick, and the
+    # only float dtype the compaction kernel moves losslessly
+    table = from_pydict(
+        {
+            "x": rng.normal(5.0, 2.0, nrows).astype(np.float32),
+            "y": y.astype(np.float32),
+            "z": rng.exponential(1.0, nrows).astype(np.float32),
+            "k": cats[rng.integers(0, N_CATEGORIES, nrows)],
+        },
+        npartitions=1,
+    )
+    return table.partitions[0]
+
+
+# --- workloads: op name -> (cost-model op class, fn(part, backend)) ----------
+
+
+def _describe(part, bk):
+    return BK.partial_stats(part, backend=bk)
+
+
+def _groupby(part, bk):
+    return BK.partial_groupby(part, "k", AGGS, backend=bk)
+
+
+def _value_counts(part, bk):
+    return BK.partial_value_counts(part, "k", backend=bk)
+
+
+def _topk_sort(part, bk):
+    return BK.partial_sort(part, "x", True, 32, backend=bk)
+
+
+def _filter_select(part, bk):
+    keep = np.asarray(part.columns["x"].data) > 5.0
+    return BK.select_rows(part, keep, backend=bk)
+
+
+WORKLOADS: Dict[str, tuple] = {
+    "describe_partial": ("describe", _describe),
+    "groupby_partial": ("groupby_agg", _groupby),
+    "value_counts_partial": ("value_counts", _value_counts),
+    "topk_sort_partial": ("sort_values", _topk_sort),
+    "filter_select": ("filter", _filter_select),
+}
+
+
+def run(nrows: int, interpret_nrows: int, warmup: int, repeats: int,
+        skip_interpret: bool = False) -> dict:
+    backends = ["numpy", "xla"] + ([] if skip_interpret else ["interpret"])
+    parts = {
+        "numpy": make_partition(nrows),
+        "xla": make_partition(nrows),
+        "interpret": make_partition(interpret_nrows),
+    }
+    cm = CostModel()
+    report: dict = {
+        "nrows": nrows,
+        "interpret_nrows": interpret_nrows,
+        "warmup": warmup,
+        "repeats": repeats,
+        "workloads": {},
+    }
+    for name, (op, fn) in WORKLOADS.items():
+        # warm every backend first (absorbs jit compiles), then interleave the
+        # timed rounds across backends so slow system drift (shared-CPU
+        # throttling) cannot bias one backend's median
+        for bk in backends:
+            for _ in range(warmup):
+                fn(parts[bk], bk)
+        times: Dict[str, list] = {bk: [] for bk in backends}
+        for _ in range(repeats):
+            for bk in backends:
+                t0 = time.perf_counter()
+                fn(parts[bk], bk)
+                times[bk].append(time.perf_counter() - t0)
+        entry: dict = {}
+        for bk in backends:
+            secs = float(np.median(times[bk]))
+            entry[bk] = {"rows": parts[bk].nrows, "seconds": secs}
+            cm.add_sample(op, bk, parts[bk].nrows, secs)
+            print(f"{name:>22s}  {bk:>9s}  {parts[bk].nrows:>9d} rows  "
+                  f"{secs * 1e3:9.3f} ms", flush=True)
+        if "xla" in entry:
+            entry["speedup_xla_vs_numpy"] = round(
+                entry["numpy"]["seconds"] / max(entry["xla"]["seconds"], 1e-12), 3
+            )
+        report["workloads"][name] = entry
+    fitted = cm.calibrate()
+    report["calibration_s_per_row"] = {
+        f"{op}|{bk}": cost for (op, bk), cost in sorted(fitted.items())
+    }
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nrows", type=int, default=1_000_000)
+    ap.add_argument("--interpret-nrows", type=int, default=32_768,
+                    help="row count for the (slow) Pallas interpret backend")
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--skip-interpret", action="store_true")
+    ap.add_argument("--out", default="BENCH_backends.json")
+    args = ap.parse_args()
+    report = run(args.nrows, args.interpret_nrows, args.warmup, args.repeats,
+                 skip_interpret=args.skip_interpret)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"\nwrote {args.out}")
+    for probe in ("describe_partial", "groupby_partial"):
+        sp = report["workloads"][probe].get("speedup_xla_vs_numpy")
+        print(f"{probe}: xla is {sp}x vs numpy at {report['nrows']} rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,7 @@ agnostic, it just learns from whatever ``observe`` feeds it.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
 
 from .dag import DAG, Node
 
@@ -63,13 +63,34 @@ class _OpStats:
 
 @dataclass
 class CostModel:
-    """Per-op-class EWMA throughput model."""
+    """Per-op-class EWMA throughput model.
+
+    On top of the EWMA there is an explicit *calibration* path for the kernel
+    backends: the frame layer records measured ``(op, backend, rows, seconds)``
+    samples as units execute (:meth:`add_sample`), and :meth:`calibrate` fits
+    per-``(op, backend)`` unit costs by least squares through the origin.
+    Setting :attr:`active_backend` makes estimation consult the fitted costs
+    for that backend, so virtual-clock benchmarks stay faithful to whichever
+    backend actually runs the partials.
+    """
 
     ewma_alpha: float = 0.3
+    active_backend: Optional[str] = None
     _stats: Dict[str, _OpStats] = field(default_factory=dict)
+    # raw measured samples: (op, backend) -> [(rows, seconds), ...]
+    _samples: Dict[Tuple[str, str], List[Tuple[float, float]]] = field(
+        default_factory=dict
+    )
+    # fitted per-backend unit costs (seconds/row), set by calibrate()
+    _backend_unit_cost: Dict[Tuple[str, str], float] = field(default_factory=dict)
 
     # -- estimation ------------------------------------------------------------
-    def unit_cost(self, op: str) -> float:
+    def unit_cost(self, op: str, backend: Optional[str] = None) -> float:
+        bk = backend or self.active_backend
+        if bk is not None:
+            fitted = self._backend_unit_cost.get((op, bk))
+            if fitted is not None:
+                return fitted
         st = self._stats.get(op)
         if st is not None:
             return st.unit_cost
@@ -130,3 +151,29 @@ class CostModel:
         else:
             st.unit_cost = (1 - self.ewma_alpha) * st.unit_cost + self.ewma_alpha * per_row
             st.n_obs += 1
+
+    # -- per-backend calibration (measured wall-time samples) -------------------
+    def add_sample(self, op: str, backend: str, rows: float, seconds: float) -> None:
+        """Record one measured unit execution for later calibration."""
+        self._samples.setdefault((op, backend), []).append(
+            (max(float(rows), 1.0), max(float(seconds), 0.0))
+        )
+
+    def calibrate(self) -> Dict[Tuple[str, str], float]:
+        """Fit per-(op, backend) unit costs from the recorded samples.
+
+        Least squares through the origin: ``seconds ≈ unit_cost * rows``
+        minimised over the sample set (Σ r·s / Σ r²) — robust to mixed
+        partition sizes, dominated by the large partitions that matter.
+        Returns the fitted map (also installed for :meth:`unit_cost`).
+        """
+        for key, samples in self._samples.items():
+            sr2 = sum(r * r for r, _ in samples)
+            if sr2 <= 0:
+                continue
+            srs = sum(r * s for r, s in samples)
+            self._backend_unit_cost[key] = max(srs / sr2, 1e-12)
+        return dict(self._backend_unit_cost)
+
+    def samples(self) -> Dict[Tuple[str, str], List[Tuple[float, float]]]:
+        return {k: list(v) for k, v in self._samples.items()}

@@ -118,6 +118,13 @@ class DAG:
         self._children: dict[int, list[Node]] = {}
         self._ssa_counter: dict[str, itertools.count] = {}
         self.cse_enabled = cse
+        self._version = 0  # bumped on any structural change (insert/rewire)
+
+    @property
+    def version(self) -> int:
+        """Monotone structural version — cache-invalidation token for
+        consumers that memoise graph walks (e.g. the scheduler)."""
+        return self._version
 
     # -- construction --------------------------------------------------------
     def add(
@@ -149,6 +156,7 @@ class DAG:
         return self._insert(node)
 
     def _insert(self, node: Node) -> Node:
+        self._version += 1
         node.nid = len(self._nodes)
         counter = self._ssa_counter.setdefault(node.op, itertools.count())
         node.label = f"{node.op}_{next(counter)}"
@@ -221,6 +229,7 @@ class DAG:
         """Redirect all children of ``old`` to consume ``new`` instead."""
         if old.nid == new.nid:
             return
+        self._version += 1
         for child in list(self._children.get(old.nid, ())):
             child.parents = tuple(new if p.nid == old.nid else p for p in child.parents)
             # fingerprints of descendants change; invalidate caches

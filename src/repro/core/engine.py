@@ -20,6 +20,7 @@ Two engines per process are fine; state is fully instance-local.
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
@@ -83,11 +84,13 @@ class Engine:
         speculation: bool = True,
         predictor: Optional[InteractionPredictor] = None,
         seed: int = 0,
+        kernel_backend: Optional[str] = None,  # frame-layer columnar backend
     ):
         self.dag = DAG()
         self.cost_model = CostModel()
         self.clock: Clock = VirtualClock() if mode == "sim" else RealClock()
         self.mode = mode
+        self.kernel_backend = kernel_backend
         self.opportunistic = opportunistic
         self.partial_results = partial_results
         self.registry = Registry()
@@ -492,6 +495,7 @@ class _BackgroundWorker:
             try:
                 with eng._lock:
                     inputs = [eng.cache.get(p) for p in node.parents]
+                t0 = time.monotonic()
                 value = eng.executor.execute(
                     node,
                     inputs,
@@ -500,7 +504,7 @@ class _BackgroundWorker:
                 )
                 with eng._lock:
                     eng.cache.put(node, value)
-                    eng.metrics.background_busy_s += 0.0
+                    eng.metrics.background_busy_s += time.monotonic() - t0
             except Preempted:
                 continue
             except KeyError:

@@ -44,15 +44,53 @@ class Scheduler:
 
     def __post_init__(self) -> None:
         self._rng = _random.Random(self.seed)
+        # hot-path memoisation: the think loop calls pick() once per executed
+        # node, and each pick() walks descendants of every source and the
+        # ancestor cone of every descendant.  Descendant sets depend only on
+        # DAG structure (invalidated via dag.version); delivery costs depend on
+        # structure + the executed set (invalidated when either changes).
+        self._dag_version: int = -1
+        self._desc_cache: dict[int, list[Node]] = {}
+        self._delivery_memo: dict[int, float] = {}
+        self._memo_done: Optional[frozenset] = None
+
+    # -- memoised graph walks ---------------------------------------------------
+    def _sync_caches(self, done: frozenset) -> None:
+        v = self.dag.version
+        if v != self._dag_version:
+            self._dag_version = v
+            self._desc_cache.clear()
+            self._delivery_memo.clear()
+            self._memo_done = None
+        if done != self._memo_done:
+            # executed set changed (node finished or was evicted): delivery
+            # costs are stale, pure-structure descendant sets are not
+            self._memo_done = done
+            self._delivery_memo.clear()
+
+    def _descendants(self, node: Node) -> list[Node]:
+        d = self._desc_cache.get(node.nid)
+        if d is None:
+            d = self.dag.descendants(node, include_self=True)
+            self._desc_cache[node.nid] = d
+        return d
+
+    def _delivery_cost(self, j: Node, done: frozenset) -> float:
+        c = self._delivery_memo.get(j.nid)
+        if c is None:
+            c = self.cost_model.delivery_cost(j, done)
+            self._delivery_memo[j.nid] = c
+        return c
 
     # -- utilities ---------------------------------------------------------------
     def utility(self, source: Node, executed: Iterable[int]) -> float:
         """Eq 1 (or Eq 4 when a predictor is used under policy='utility_p')."""
-        done = set(executed)
+        done = executed if isinstance(executed, frozenset) else frozenset(executed)
+        self._sync_caches(done)
         use_p = self.policy == "utility_p" and self.predictor is not None
         total = 0.0
-        for j in self.dag.descendants(source, include_self=True):
-            c_j = self.cost_model.delivery_cost(j, done)
+        for j in self._descendants(source):
+            c_j = self._delivery_cost(j, done)
             if use_p:
                 c_j *= self.predictor.p_interaction(j)
             total += c_j
@@ -62,19 +100,19 @@ class Scheduler:
 
     # -- selection ----------------------------------------------------------------
     def sources(self, executed: Iterable[int]) -> list[Node]:
-        done = set(executed)
+        done = executed if isinstance(executed, frozenset) else frozenset(executed)
+        self._sync_caches(done)
         out = []
         for n in source_operators(self.dag, done):
             if n.nid in self.evicted_once and all(
-                d.nid in done
-                for d in self.dag.descendants(n, include_self=False)
+                d.nid in done for d in self._descendants(n) if d.nid != n.nid
             ):
                 continue  # no demand: don't churn on a GC'd result
             out.append(n)
         return out
 
     def pick(self, executed: Iterable[int]) -> Optional[Node]:
-        done = set(executed)
+        done = frozenset(executed)
         srcs = self.sources(done)
         if not srcs:
             return None

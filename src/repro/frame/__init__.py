@@ -5,6 +5,7 @@ DataFrame API, notebook-cell parser, per-partition preemptible operators,
 think-time-aware partitioning, and shard_map-distributed blocking operators.
 """
 from .api import ColumnRef, DataFrame, GroupBy, Predicate, ScalarHandle, Session
+from .backend import BackendPolicy, active_backend, set_frame_backend, use_backend
 from .io import Catalog, ColSpec, TableSpec, default_catalog
 from .parser import CellRunner
 from .partitioner import plan_partitions, uniform_partitions
@@ -16,4 +17,5 @@ __all__ = [
     "Catalog", "TableSpec", "ColSpec", "default_catalog", "CellRunner",
     "plan_partitions", "uniform_partitions", "FrameRuntime", "install",
     "Column", "Partition", "PTable", "from_pydict",
+    "BackendPolicy", "active_backend", "set_frame_backend", "use_backend",
 ]

@@ -1,0 +1,394 @@
+"""Pluggable columnar kernel backend for the frame layer.
+
+The blocking operators in :mod:`repro.frame.blocking` are written as scalar
+numpy partial/combine pairs — correct, but simulation-grade.  This module is
+the dispatch seam that routes the same partial computations to the jit'd
+kernel dispatchers in :mod:`repro.kernels.ops`:
+
+========================  =============================================
+frame partial             kernel
+========================  =============================================
+``partial_stats``         ``masked_stats`` (batched over columns)
+``partial_groupby``       ``segment_reduce`` (dictionary-coded keys)
+``partial_value_counts``  ``segment_reduce`` (counts only)
+``partial_sort(limit=k)`` ``topk`` (threshold + small residual argsort)
+``select_rows``           ``filter_compact`` (per-column compaction)
+========================  =============================================
+
+Backend selection is per-call via a policy chain, strongest first:
+
+1. explicit ``backend=`` argument,
+2. a process-global override (``set_frame_backend`` / ``use_backend``),
+3. the ``REPRO_FRAME_BACKEND`` environment variable,
+4. the engine's configured default (``Engine(kernel_backend=...)``),
+5. ``"numpy"``.
+
+``"numpy"`` is the scalar host path; ``"xla"``/``"interpret"``/``"pallas"``
+map onto the kernel dispatchers' backends.  Every accelerated function falls
+back to the numpy implementation for shapes it cannot handle (string columns,
+callable aggs, empty partitions, non-dictionary group keys), so the frame
+layer can call these unconditionally.
+
+Note on precision: the accelerated backends accumulate in float32 (the TPU
+kernels' native dtype); the numpy path uses float64.  Parity is to ~1e-4
+relative, which the backend-parity tests pin down.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from . import blocking as B
+from .blocking import BUILTIN_AGGS, ColStats
+from .table import Column, Partition
+
+BACKENDS = ("numpy", "xla", "interpret", "pallas")
+ENV_VAR = "REPRO_FRAME_BACKEND"
+
+_GLOBAL: Optional[str] = None
+
+
+def _check(name: str) -> str:
+    if name not in BACKENDS:
+        raise ValueError(f"unknown frame backend {name!r}; expected one of {BACKENDS}")
+    return name
+
+
+def set_frame_backend(name: Optional[str]) -> None:
+    """Process-global backend override (None = clear)."""
+    global _GLOBAL
+    _GLOBAL = _check(name) if name is not None else None
+
+
+@contextmanager
+def use_backend(name: Optional[str]):
+    """Scoped backend override (tests / benchmarks)."""
+    global _GLOBAL
+    prev = _GLOBAL
+    _GLOBAL = _check(name) if name is not None else None
+    try:
+        yield
+    finally:
+        _GLOBAL = prev
+
+
+@dataclass
+class BackendPolicy:
+    """Per-engine backend resolution (engine config is the weakest override)."""
+
+    engine_default: Optional[str] = None
+
+    def resolve(self, override: Optional[str] = None) -> str:
+        for cand in (override, _GLOBAL, os.environ.get(ENV_VAR), self.engine_default):
+            if cand:
+                return _check(cand)
+        return "numpy"
+
+
+_DEFAULT_POLICY = BackendPolicy()
+
+
+def active_backend(override: Optional[str] = None) -> str:
+    return _DEFAULT_POLICY.resolve(override)
+
+
+def _kernel(backend: str):
+    """Route repro.kernels.ops dispatch to the requested kernel backend.
+
+    Thread-local: the real-mode background worker executes units concurrently
+    with foreground interactions, so a process-global save/restore would race
+    (and could strand the global override in the wrong state)."""
+    return ops.local_backend(backend)
+
+
+# --------------------------------------------------------------------------- #
+# device-resident column cache                                                 #
+#                                                                              #
+# Columns are immutable by construction (every frame op builds new Columns),   #
+# so the f32/int32 device representation each kernel consumes is converted     #
+# once and stashed on the Column instance.  This is the accelerated engine's   #
+# data model — columns live device-resident between think-time quanta — and    #
+# it is what makes repeated partials cheap: steady-state calls skip the        #
+# host-side dtype conversion and transfer entirely.  Cost: one extra f32 copy  #
+# per numeric column touched by a kernel backend.                              #
+# --------------------------------------------------------------------------- #
+
+
+def _dev_f32(col: Column):
+    dev = col.__dict__.get("_dev_f32")
+    if dev is None:
+        dev = jnp.asarray(np.asarray(col.data, np.float32))
+        col.__dict__["_dev_f32"] = dev
+    return dev
+
+
+def _dev_i32(col: Column):
+    dev = col.__dict__.get("_dev_i32")
+    if dev is None:
+        dev = jnp.asarray(np.asarray(col.data, np.int32))
+        col.__dict__["_dev_i32"] = dev
+    return dev
+
+
+def _dev_valid(col: Column):
+    dev = col.__dict__.get("_dev_valid")
+    if dev is None:
+        dev = jnp.asarray(np.asarray(col.valid_mask()))
+        col.__dict__["_dev_valid"] = dev
+    return dev
+
+
+# --------------------------------------------------------------------------- #
+# describe / mean — masked_stats                                               #
+# --------------------------------------------------------------------------- #
+
+
+def partial_stats(
+    part: Partition,
+    cols: Optional[Sequence[str]] = None,
+    backend: Optional[str] = None,
+) -> Dict[str, ColStats]:
+    bk = active_backend(backend)
+    names = list(cols) if cols is not None else B.numeric_columns(part)
+    if bk == "numpy" or not names or part.nrows == 0:
+        return B.partial_stats(part, cols)
+    # the stacked + shape-bucketed (C, nb) matrix is cached per partition so
+    # steady-state describe partials are a single kernel dispatch
+    key = tuple(names)
+    cached = part.__dict__.get("_dev_stats")
+    if cached is None or cached[0] != key:
+        nb = ops.pad_len(part.nrows)
+        pad = nb - part.nrows
+        xs = jnp.stack([_dev_f32(part.columns[n]) for n in names])
+        ms = jnp.stack([_dev_valid(part.columns[n]) for n in names])
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad)))
+            ms = jnp.pad(ms, ((0, 0), (0, pad)), constant_values=False)
+        cached = (key, xs, ms)
+        part.__dict__["_dev_stats"] = cached
+    _, xs, ms = cached
+    with _kernel(bk):
+        raw = np.asarray(ops.masked_stats_batch(xs, ms), np.float64)
+    out: Dict[str, ColStats] = {}
+    for i, name in enumerate(names):
+        count, s, ss, mn, mx = raw[i]
+        if count == 0:
+            out[name] = ColStats(0.0, 0.0, 0.0, np.inf, -np.inf)
+        else:
+            mean = s / count
+            m2 = max(ss - s * s / count, 0.0)
+            out[name] = ColStats(float(count), float(mean), float(m2), float(mn), float(mx))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# groupby / value_counts — segment_reduce on dictionary codes                  #
+# --------------------------------------------------------------------------- #
+
+_SEG_MODE = {"sum": "sum", "count": "sum", "mean": "sum", "min": "min", "max": "max"}
+
+
+def _groupby_supported(part: Partition, by: str, aggs, topk_keys) -> bool:
+    key_col = part.columns.get(by)
+    if key_col is None or key_col.dictionary is None:
+        return False  # segment_reduce needs dense [0, nb) codes
+    if topk_keys is not None or part.nrows == 0:
+        return False
+    for _, col, fn in aggs:
+        if callable(fn) or fn not in BUILTIN_AGGS:
+            return False
+        if part.columns[col].is_string:
+            return False
+    return True
+
+
+def partial_groupby(
+    part: Partition,
+    by: str,
+    aggs: Sequence[Tuple[str, str, Any]],
+    topk_keys: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> dict:
+    bk = active_backend(backend)
+    if bk == "numpy" or not _groupby_supported(part, by, aggs, topk_keys):
+        return B.partial_groupby(part, by, aggs, topk_keys)
+    key_col = part.columns[by]
+    nb = len(key_col.dictionary)
+    keys = _dev_i32(key_col)
+    kvalid = _dev_valid(key_col)
+
+    # Assemble ONE batched kernel call for the whole agg set.  Validity rows
+    # are deduplicated by the agg column's mask identity — unmasked columns
+    # (and key presence) share a single count row instead of paying per-agg
+    # count passes.
+    values: list = []
+    modes: list = []
+    valid_idx: list = []
+    valids: list = [kvalid]  # row 0: key presence
+    valid_row_of: Dict[int, int] = {}
+    agg_plan: list = []  # (out_name, fn, value_row | None, valid_row)
+    for out_name, col, fn in aggs:
+        vcol = part.columns[col]
+        if vcol.mask is None:
+            vrow = 0
+        else:
+            key = id(vcol.mask)
+            vrow = valid_row_of.get(key)
+            if vrow is None:
+                vrow = len(valids)
+                valids.append(kvalid & _dev_valid(vcol))
+                valid_row_of[key] = vrow
+        if fn == "count":
+            agg_plan.append((out_name, fn, None, vrow))
+            continue
+        values.append(_dev_f32(vcol))
+        modes.append(_SEG_MODE[fn])
+        valid_idx.append(vrow)
+        agg_plan.append((out_name, fn, len(values) - 1, vrow))
+    with _kernel(bk):
+        reds, cnts = ops.segment_reduce_batch(
+            keys, values, valids, nb, modes, valid_idx
+        )
+    reds = np.asarray(reds, np.float64)
+    cnts = np.asarray(cnts, np.float64)
+    present = cnts[0] > 0
+    dense: Dict[str, Tuple[str, Any]] = {}
+    for out_name, fn, srow, vrow in agg_plan:
+        if fn == "sum":
+            dense[out_name] = ("sum", reds[srow][present])
+        elif fn == "count":
+            dense[out_name] = ("sum", cnts[vrow][present])
+        elif fn == "mean":
+            dense[out_name] = ("sum_count", (reds[srow][present], cnts[vrow][present]))
+        else:  # min / max: empty (all-null) groups keep the ±inf neutral
+            dense[out_name] = (fn, reds[srow][present])
+    uniq = np.nonzero(present)[0].astype(key_col.data.dtype)
+    return {"keys": uniq, "aggs": dense}
+
+
+def partial_value_counts(
+    part: Partition, col: str, backend: Optional[str] = None
+) -> Tuple[np.ndarray, np.ndarray]:
+    bk = active_backend(backend)
+    c = part.columns[col]
+    if bk == "numpy" or c.dictionary is None or part.nrows == 0:
+        return B.partial_value_counts(part, col)
+    with _kernel(bk):
+        _, cnts = ops.segment_reduce_batch(
+            _dev_i32(c), [], [_dev_valid(c)], len(c.dictionary), [], []
+        )
+    cnt = np.asarray(cnts)[0]
+    present = cnt > 0
+    values = np.nonzero(present)[0].astype(c.data.dtype)
+    return values, cnt[present].astype(np.int64)
+
+
+# --------------------------------------------------------------------------- #
+# limit-sort — topk threshold + residual argsort                               #
+# --------------------------------------------------------------------------- #
+
+TOPK_MAX_K = 128  # the kernel runs k (max, mask) rounds; beyond this, numpy
+
+
+def partial_sort(
+    part: Partition,
+    by: str,
+    ascending: bool,
+    limit: Optional[int],
+    n_samples: int = 32,
+    backend: Optional[str] = None,
+) -> Tuple[Partition, np.ndarray]:
+    bk = active_backend(backend)
+    key_col = part.columns.get(by)
+    if (
+        bk == "numpy"
+        or limit is None
+        or not (1 <= limit <= TOPK_MAX_K)
+        or key_col is None
+        or key_col.is_string
+        or part.nrows <= limit
+    ):
+        return B.partial_sort(part, by, ascending, limit, n_samples)
+    keys = np.asarray(key_col.data, np.float64)
+    if key_col.mask is not None:
+        m = np.asarray(key_col.mask)
+        keys = np.where(m, keys, np.inf if ascending else -np.inf)
+    if np.isnan(keys).any():
+        # unmasked NaN keys (e.g. a merge_groupby mean output): lax.top_k
+        # treats NaN as maximal and would poison the threshold, silently
+        # dropping valid rows — numpy's argsort-NaN-last semantics instead
+        return B.partial_sort(part, by, ascending, limit, n_samples)
+    kf32 = keys.astype(np.float32)
+    with _kernel(bk):
+        winners = np.asarray(ops.topk_padded(kf32, limit, largest=not ascending))
+    # threshold in f32 space: rounding is monotone, so rows whose f32 key beats
+    # the f32 k-th winner are a superset of the true top-k (ties included)
+    kth = winners[-1]
+    cand = np.nonzero(kf32 <= kth if ascending else kf32 >= kth)[0]
+    order_local = np.argsort(keys[cand] if ascending else -keys[cand], kind="stable")
+    idx = cand[order_local][:limit]
+    sorted_part = part.take(idx)
+    skeys = keys[idx]
+    if len(skeys) == 0:
+        samples = np.array([])
+    else:
+        samples = skeys[
+            np.linspace(0, len(skeys) - 1, min(n_samples, len(skeys))).astype(int)
+        ]
+    return sorted_part, samples
+
+
+# --------------------------------------------------------------------------- #
+# predicate compaction — filter_compact                                        #
+# --------------------------------------------------------------------------- #
+
+
+def _compact_lossless(c: Column) -> bool:
+    """Only dtypes the f32 compaction kernel moves exactly: float32 itself,
+    and dictionary codes (int32 bounded by the dictionary length, far below
+    f32's 2^24 integer range).  Everything else — float64, int64, plain ints —
+    would be silently rounded through the kernel's f32 datapath, so it takes
+    the numpy gather instead."""
+    if c.data.dtype == np.float32:
+        return True
+    if c.dictionary is not None and len(c.dictionary) < (1 << 24):
+        return True
+    return False
+
+
+def select_rows(
+    part: Partition, keep: np.ndarray, backend: Optional[str] = None
+) -> Partition:
+    bk = active_backend(backend)
+    keep = np.asarray(keep, bool)
+    if bk == "numpy" or part.nrows == 0:
+        return part.select_rows(keep)
+    count = int(keep.sum())
+    # upload + pad the keep mask once; column data rides the device cache
+    nb = ops.pad_len(part.nrows)
+    keep_dev = jnp.asarray(keep)
+    if nb != part.nrows:
+        keep_dev = jnp.pad(keep_dev, (0, nb - part.nrows), constant_values=False)
+    new_cols: Dict[str, Column] = {}
+    with _kernel(bk):
+        for name in part.order:
+            c = part.columns[name]
+            if not _compact_lossless(c):
+                new_cols[name] = c.select(keep)
+                continue
+            out, _ = ops.filter_compact_padded(_dev_f32(c), keep_dev)
+            data = np.asarray(out)[:count].astype(c.data.dtype)
+            mask = None
+            if c.mask is not None:
+                mout, _ = ops.filter_compact_padded(
+                    jnp.asarray(c.mask).astype(jnp.float32), keep_dev
+                )
+                mask = np.asarray(mout)[:count] > 0.5
+            new_cols[name] = Column(data=data, mask=mask, dictionary=c.dictionary)
+    return Partition(new_cols, list(part.order))

@@ -123,13 +123,20 @@ def merge_value_counts(
     dictionary: Optional[np.ndarray],
     col: str,
 ) -> PTable:
-    acc: Dict[Any, int] = {}
-    for values, counts in partials:
-        for v, c in zip(values.tolist(), counts.tolist()):
-            acc[v] = acc.get(v, 0) + int(c)
-    items = sorted(acc.items(), key=lambda kv: (-kv[1], kv[0]))
-    vals = np.array([k for k, _ in items])
-    cnts = np.array([v for _, v in items], dtype=np.int64)
+    nonempty = [(v, c) for v, c in partials if len(v)]
+    if nonempty:
+        all_vals = np.concatenate([v for v, _ in nonempty])
+        all_cnts = np.concatenate([c for _, c in nonempty]).astype(np.int64)
+        uniq, inv = np.unique(all_vals, return_inverse=True)
+        sums = np.zeros(len(uniq), dtype=np.int64)
+        np.add.at(sums, inv, all_cnts)
+        # order by (-count, value): lexsort's last key is primary
+        order = np.lexsort((uniq, -sums))
+        vals = uniq[order]
+        cnts = sums[order]
+    else:
+        vals = np.array([])
+        cnts = np.array([], dtype=np.int64)
     value_col = Column(
         data=np.asarray(vals.astype(np.int32 if dictionary is not None else vals.dtype)),
         dictionary=dictionary,
@@ -226,8 +233,12 @@ def merge_groupby(
     dictionary: Optional[np.ndarray],
     topk_keys: Optional[int] = None,
 ) -> PTable:
-    all_keys = np.unique(np.concatenate([p["keys"] for p in partials if len(p["keys"])]))\
-        if any(len(p["keys"]) for p in partials) else np.array([])
+    nonempty = [p for p in partials if len(p["keys"])]
+    all_keys = (
+        np.unique(np.concatenate([p["keys"] for p in nonempty]))
+        if nonempty
+        else np.array([])
+    )
     if topk_keys is not None:
         all_keys = all_keys[:topk_keys]
     nk = len(all_keys)
@@ -239,14 +250,22 @@ def merge_groupby(
             dictionary=dictionary,
         )
     }
+    # One shared scatter-index vector across all partials: partial keys are a
+    # subset of all_keys (anything sliced off by topk is > max(all_keys), so
+    # searchsorted parks it at nk and the in-bounds filter drops it).
+    if nonempty:
+        cat_keys = np.concatenate([p["keys"] for p in nonempty])
+        idx_all = np.searchsorted(all_keys, cat_keys)
+        inb = idx_all < nk
+        idx_in = idx_all[inb]
     for out_name, col, fn in aggs:
         if callable(fn):
             buckets: List[List[np.ndarray]] = [[] for _ in range(nk)]
-            for p in partials:
+            for p in nonempty:
                 idx = np.searchsorted(all_keys, p["keys"])
                 _, groups = p["aggs"][out_name]
                 for local_i, global_i in enumerate(idx):
-                    if global_i < nk and (nk == 0 or all_keys[global_i] == p["keys"][local_i]):
+                    if global_i < nk and all_keys[global_i] == p["keys"][local_i]:
                         buckets[global_i].append(groups[local_i])
             vals = np.array(
                 [fn(np.concatenate(b)) if b else np.nan for b in buckets],
@@ -256,23 +275,21 @@ def merge_groupby(
             continue
         acc = np.full(nk, _neutral(fn if fn != "mean" else "sum"))
         cnt = np.zeros(nk)
-        for p in partials:
-            if not len(p["keys"]):
-                continue
-            idx = np.searchsorted(all_keys, p["keys"])
-            inb = idx < nk
-            idx = idx[inb]
-            kind, payload = p["aggs"][out_name]
-            if kind == "sum":
-                np.add.at(acc, idx, payload[inb])
-            elif kind == "sum_count":
-                s, c = payload
-                np.add.at(acc, idx, s[inb])
-                np.add.at(cnt, idx, c[inb])
-            elif kind == "min":
-                np.minimum.at(acc, idx, payload[inb])
-            elif kind == "max":
-                np.maximum.at(acc, idx, payload[inb])
+        if nonempty:
+            kind = nonempty[0]["aggs"][out_name][0]
+            if kind == "sum_count":
+                s = np.concatenate([p["aggs"][out_name][1][0] for p in nonempty])
+                c = np.concatenate([p["aggs"][out_name][1][1] for p in nonempty])
+                np.add.at(acc, idx_in, s[inb])
+                np.add.at(cnt, idx_in, c[inb])
+            else:
+                payload = np.concatenate([p["aggs"][out_name][1] for p in nonempty])
+                if kind == "sum":
+                    np.add.at(acc, idx_in, payload[inb])
+                elif kind == "min":
+                    np.minimum.at(acc, idx_in, payload[inb])
+                elif kind == "max":
+                    np.maximum.at(acc, idx_in, payload[inb])
         if fn == "mean":
             acc = np.divide(acc, cnt, out=np.full(nk, np.nan), where=cnt > 0)
         cols[out_name] = Column(data=np.asarray(acc))

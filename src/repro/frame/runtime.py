@@ -7,7 +7,8 @@ reproducible; real mode measures wall time and calibrates the same model.
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional, Sequence
+import time
+from typing import Any, Callable, List, Optional, Sequence
 
 import numpy as np
 
@@ -15,7 +16,9 @@ from ..core.costmodel import CostModel
 from ..core.dag import Node
 from ..core.engine import Engine
 from ..core.executor import OpRuntime, Unit
+from . import backend as BK
 from . import blocking as B
+from .backend import BackendPolicy
 from .exprs import eval_expr, predicate_mask
 from .io import Catalog
 from .schema import SchemaUnknown, infer_schema
@@ -35,11 +38,31 @@ class FrameRuntime:
         self.engine = engine
         self.catalog = catalog
         self.cost_model: CostModel = engine.cost_model
+        self.backend_policy = BackendPolicy(
+            engine_default=getattr(engine, "kernel_backend", None)
+        )
         self._register_all()
 
     # ------------------------------------------------------------- helpers --
     def _node_cost(self, node: Node) -> float:
         return self.cost_model.cost(node)
+
+    def backend(self) -> str:
+        """The columnar kernel backend for this runtime's blocking partials."""
+        return self.backend_policy.resolve()
+
+    def _timed(self, node: Node, rows: int, fn: Callable[[str], Any]) -> Callable[[], Any]:
+        """Wrap a partial-unit body: resolve the backend at execution time,
+        measure wall time, and feed the sample to cost-model calibration."""
+
+        def run():
+            bk = self.backend_policy.resolve()
+            t0 = time.perf_counter()
+            out = fn(bk)
+            self.cost_model.add_sample(node.op, bk, rows, time.perf_counter() - t0)
+            return out
+
+        return run
 
     def _unit_costs_by_rows(self, node: Node, parts: Sequence[Partition]) -> List[float]:
         total_rows = max(sum(p.nrows for p in parts), 1)
@@ -154,7 +177,7 @@ class FrameRuntime:
 
         def filter_apply(node: Node, part: Partition, extras) -> Partition:
             keep = predicate_mask(filter_expr(node), part, extras)
-            return part.select_rows(keep)
+            return BK.select_rows(part, keep, backend=self.backend())
 
         def project_apply(node: Node, part: Partition, extras) -> Partition:
             return part.project(node.kwargs["cols"])
@@ -186,7 +209,7 @@ class FrameRuntime:
             for name in subset:
                 v = part.columns[name].valid_mask()
                 keep = v if keep is None else (keep & v)
-            return part.select_rows(keep)
+            return BK.select_rows(part, keep, backend=self.backend())
 
         def join_apply(node: Node, part: Partition, extras) -> Partition:
             right: PTable = extras[0]
@@ -252,7 +275,13 @@ class FrameRuntime:
             parent: PTable = inputs[0]
             costs = self._unit_costs_by_rows(node, parent.partitions)
             return [
-                Unit(fn=(lambda p=p: B.partial_stats(p)), cost_s=c, tag=f"stats[{i}]")
+                Unit(
+                    fn=self._timed(
+                        node, p.nrows, lambda bk, p=p: BK.partial_stats(p, backend=bk)
+                    ),
+                    cost_s=c,
+                    tag=f"stats[{i}]",
+                )
                 for i, (p, c) in enumerate(zip(parent.partitions, costs))
             ]
 
@@ -288,7 +317,11 @@ class FrameRuntime:
             costs = self._unit_costs_by_rows(node, parent.partitions)
             return [
                 Unit(
-                    fn=(lambda p=p: B.partial_value_counts(p, col)),
+                    fn=self._timed(
+                        node,
+                        p.nrows,
+                        lambda bk, p=p: BK.partial_value_counts(p, col, backend=bk),
+                    ),
                     cost_s=c,
                     tag=f"vc[{i}]",
                 )
@@ -311,7 +344,11 @@ class FrameRuntime:
             costs = self._unit_costs_by_rows(node, parent.partitions)
             return [
                 Unit(
-                    fn=(lambda p=p: B.partial_groupby(p, by, aggs, topk)),
+                    fn=self._timed(
+                        node,
+                        p.nrows,
+                        lambda bk, p=p: BK.partial_groupby(p, by, aggs, topk, backend=bk),
+                    ),
                     cost_s=c,
                     tag=f"gb[{i}]",
                 )
@@ -343,7 +380,11 @@ class FrameRuntime:
             costs = self._unit_costs_by_rows(node, parent.partitions)
             return [
                 Unit(
-                    fn=(lambda p=p: B.partial_sort(p, by, asc, limit)),
+                    fn=self._timed(
+                        node,
+                        p.nrows,
+                        lambda bk, p=p: BK.partial_sort(p, by, asc, limit, backend=bk),
+                    ),
                     cost_s=c,
                     tag=f"sort[{i}]",
                 )
@@ -419,8 +460,10 @@ class FrameRuntime:
             frame = eng.value_of(frame_node)
             by = parent.kwargs["by"]
             aggs = parent.kwargs["aggs"]
+            bk = self.backend()
             partials = [
-                B.partial_groupby(p, by, aggs, topk_keys=k) for p in frame.partitions
+                BK.partial_groupby(p, by, aggs, topk_keys=k, backend=bk)
+                for p in frame.partitions
             ]
             dictionary = frame.partitions[0].columns[by].dictionary
             value = B.merge_groupby(partials, by, aggs, dictionary, topk_keys=k)
@@ -436,7 +479,11 @@ class FrameRuntime:
             asc = parent.kwargs.get("ascending", True)
             if node.op == "tail":
                 asc = not asc
-            partials = [B.partial_sort(p, by, asc, limit=k) for p in frame.partitions]
+            bk = self.backend()
+            partials = [
+                BK.partial_sort(p, by, asc, limit=k, backend=bk)
+                for p in frame.partitions
+            ]
             value = B.merge_sort(partials, by, asc, limit=k)
             # local top-k selection avoids the global merge: charge ~60 %
             eng.clock.advance(self._node_cost(parent) * 0.6)

@@ -12,7 +12,10 @@ TPU.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import functools
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +30,7 @@ from .topk import topk as _topk_pallas
 
 _FORCED: Optional[str] = None
 _XLA_UNROLL = False  # roofline probes: unroll xla-path loops for exact flops
+_TLS = threading.local()  # per-thread override (scoped, race-free)
 
 
 def set_backend(backend: Optional[str]) -> None:
@@ -35,12 +39,30 @@ def set_backend(backend: Optional[str]) -> None:
     _FORCED = backend
 
 
+@contextmanager
+def local_backend(backend: Optional[str]):
+    """Thread-local scoped backend override.  Takes precedence over
+    :func:`set_backend`'s process-global.  Use this from code that may run on
+    multiple threads at once (the frame layer's background worker executes
+    units concurrently with foreground interactions): a process-global
+    save/restore would race and could strand the global in the wrong state."""
+    prev = getattr(_TLS, "forced", None)
+    _TLS.forced = backend
+    try:
+        yield
+    finally:
+        _TLS.forced = prev
+
+
 def set_xla_unroll(flag: bool) -> None:
     global _XLA_UNROLL
     _XLA_UNROLL = flag
 
 
 def backend() -> str:
+    local = getattr(_TLS, "forced", None)
+    if local is not None:
+        return local
     if _FORCED is not None:
         return _FORCED
     return "pallas" if jax.default_backend() == "tpu" else "xla"
@@ -97,3 +119,242 @@ def ssd_scan(x, log_a, bmat, cmat, chunk: int = 128):
     if b == "xla":
         return ref.ssd_xla_chunked(x, log_a, bmat, cmat, chunk=chunk)
     return _ssd_pallas(x, log_a, bmat, cmat, chunk=chunk, interpret=(b == "interpret"))
+
+
+# --------------------------------------------------------------------------- #
+# Padded / batched entry points for the frame layer                            #
+#                                                                              #
+# The dispatchers above jit-specialise on exact array shapes, so calling them  #
+# once per dataframe partition (whose row counts all differ slightly) would    #
+# recompile per partition — the 20× eager-recompile problem noted in           #
+# `repro.frame.table`.  These wrappers round row counts up to power-of-two     #
+# buckets (null-masked padding, semantics unchanged) so an entire table's      #
+# partitions share a handful of compiled executables, and batch the per-column #
+# describe pass into one call.                                                 #
+# --------------------------------------------------------------------------- #
+
+PAD_MIN = 512  # smallest padded length (also amortises tiny partitions)
+_TILE = 16384  # scan-tile rows for the CPU/XLA paths: temps stay cache-resident
+
+
+def pad_len(n: int, minimum: int = PAD_MIN) -> int:
+    """Next power-of-two bucket ≥ n (≥ minimum) — the shared jit shape."""
+    if n <= minimum:
+        return minimum
+    return 1 << (int(n) - 1).bit_length()
+
+
+def _pad1(x: jnp.ndarray, nb: int, value) -> jnp.ndarray:
+    n = x.shape[0]
+    if nb == n:
+        return x
+    return jnp.pad(x, (0, nb - n), constant_values=value)
+
+
+def _stats_row_tiled(x: jnp.ndarray, m: jnp.ndarray, tile: int) -> jnp.ndarray:
+    """One column's (count, sum, sumsq, min, max) via a lax.scan over tiles —
+    the XLA mirror of the Pallas kernel's grid: one HBM pass, accumulators and
+    per-tile temporaries stay in cache instead of materialising n-sized
+    intermediates (≫ faster than the naive five-reduction form on CPU)."""
+    nt = x.shape[0] // tile
+    xt = x.reshape(nt, tile)
+    mt = m.reshape(nt, tile)
+
+    def body(acc, inp):
+        xi, mi = inp
+        mf = mi.astype(jnp.float32)
+        cnt, s, ss, mn, mx = acc
+        return (
+            cnt + mf.sum(),
+            s + (xi * mf).sum(),
+            ss + (xi * xi * mf).sum(),
+            jnp.minimum(mn, jnp.where(mi, xi, jnp.inf).min()),
+            jnp.maximum(mx, jnp.where(mi, xi, -jnp.inf).max()),
+        ), None
+
+    init = (
+        jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0),
+        jnp.float32(jnp.inf), jnp.float32(-jnp.inf),
+    )
+    acc, _ = jax.lax.scan(body, init, (xt, mt))
+    return jnp.stack(acc)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def _masked_stats_batch_xla(xs: jnp.ndarray, ms: jnp.ndarray, tile: int) -> jnp.ndarray:
+    return jnp.stack(
+        [_stats_row_tiled(xs[i], ms[i], tile) for i in range(xs.shape[0])]
+    )
+
+
+def masked_stats_batch(xs, ms) -> jnp.ndarray:
+    """Batched fused describe pass: (C, n) values + (C, n) validity → (C, 5)
+    rows of (count, sum, sumsq, min, max).  One dispatch covers every numeric
+    column of a partition; rows are padded to a shared shape bucket."""
+    xs = jnp.asarray(xs, jnp.float32)
+    ms = jnp.asarray(ms, bool)
+    c, n = xs.shape
+    nb = pad_len(n)
+    if nb != n:
+        xs = jnp.pad(xs, ((0, 0), (0, nb - n)))
+        ms = jnp.pad(ms, ((0, 0), (0, nb - n)), constant_values=False)
+    b = backend()
+    if b == "xla":
+        return _masked_stats_batch_xla(xs, ms, min(_TILE, nb))
+    interp = b == "interpret"
+    return jnp.stack([_stats_pallas(xs[i], ms[i], interpret=interp) for i in range(c)])
+
+
+@functools.partial(jax.jit, static_argnames=("k", "largest"))
+def _topk_xla(x: jnp.ndarray, k: int, largest: bool) -> jnp.ndarray:
+    vals, _ = jax.lax.top_k(x if largest else -x, k)
+    return vals if largest else -vals
+
+
+def topk_padded(x, k: int, largest: bool = True) -> jnp.ndarray:
+    """`topk` on a shape-bucketed input (pads with the losing sentinel).
+
+    The xla path uses ``lax.top_k`` directly (a single O(n) selection pass —
+    far cheaper than the sort-based reference oracle)."""
+    x = jnp.asarray(x, jnp.float32)
+    nb = pad_len(x.shape[0])
+    sentinel = -jnp.inf if largest else jnp.inf
+    xp = _pad1(x, nb, sentinel)
+    if backend() == "xla":
+        return _topk_xla(xp, k, largest)
+    return topk(xp, k, largest=largest)
+
+
+def filter_compact_padded(x, keep, fill: float = 0.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """`filter_compact` on a shape-bucketed input; returns (compacted[n], count)."""
+    x = jnp.asarray(x, jnp.float32)
+    keep = jnp.asarray(keep, bool)
+    n = x.shape[0]
+    nb = pad_len(n)
+    out, cnt = filter_compact(_pad1(x, nb, fill), _pad1(keep, nb, False), fill=fill)
+    return out[:n], cnt
+
+
+# -- batched groupby partials -------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_buckets", "modes", "valid_idx", "tile")
+)
+def _segment_batch_xla(
+    keys: jnp.ndarray,  # int32[n]
+    values: Tuple[jnp.ndarray, ...],  # S × f32[n]
+    valids: Tuple[jnp.ndarray, ...],  # V × bool[n]
+    num_buckets: int,
+    modes: Tuple[str, ...],  # len S, "sum" | "min" | "max"
+    valid_idx: Tuple[int, ...],  # len S, value row -> valid row
+    tile: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """All of a groupby's reductions in one dispatch, via lax.scan over row
+    tiles.  Per tile the bucket one-hot is built once; every sum-mode row and
+    every count row rides the same (rows × T) @ (T × buckets) contraction —
+    the XLA mirror of the segment_reduce Pallas kernel's MXU formulation,
+    with temporaries cache-resident instead of n-sized.  min/max rows use a
+    masked select + reduce on the same one-hot (no scatter: XLA:CPU scatter
+    is serial and catastrophically slow)."""
+    n = keys.shape[0]
+    nt = n // tile
+    kt = keys.reshape(nt, tile)
+    vt = tuple(v.reshape(nt, tile) for v in values)
+    mt = tuple(m.reshape(nt, tile) for m in valids)
+    S, V = len(values), len(valids)
+    sum_rows = tuple(i for i, mo in enumerate(modes) if mo == "sum")
+    iota = jnp.arange(num_buckets, dtype=jnp.int32)
+
+    mm_rows = tuple(i for i, mo in enumerate(modes) if mo in ("min", "max"))
+
+    def body(acc, inp):
+        ki, vi, mi = inp
+        sums, cnts, minmax = acc
+        ohb = ki[:, None] == iota[None, :]  # (T, nb) bool
+        oh = ohb.astype(jnp.float32)
+        mf = [m.astype(jnp.float32) for m in mi]
+        gemm_rows = [vi[s] * mf[valid_idx[s]] for s in sum_rows] + mf
+        acc_rows = jnp.stack(gemm_rows) @ oh  # (len(sum_rows)+V, nb)
+        sums = sums + acc_rows[: len(sum_rows)]
+        cnts = cnts + acc_rows[len(sum_rows):]
+        mms = []
+        for j, s in enumerate(mm_rows):
+            hit = ohb & mi[valid_idx[s]][:, None]
+            if modes[s] == "min":
+                contrib = jnp.where(hit, vi[s][:, None], jnp.inf).min(0)
+                mms.append(jnp.minimum(minmax[j], contrib))
+            else:
+                contrib = jnp.where(hit, vi[s][:, None], -jnp.inf).max(0)
+                mms.append(jnp.maximum(minmax[j], contrib))
+        return (sums, cnts, tuple(mms)), None
+
+    init = (
+        jnp.zeros((len(sum_rows), num_buckets), jnp.float32),
+        jnp.zeros((V, num_buckets), jnp.float32),
+        tuple(
+            jnp.full(num_buckets, jnp.inf if modes[s] == "min" else -jnp.inf,
+                     jnp.float32)
+            for s in mm_rows
+        ),
+    )
+    (sums, cnts, minmax), _ = jax.lax.scan(body, init, (kt, vt, mt))
+    by_row = {s: sums[j] for j, s in enumerate(sum_rows)}
+    by_row.update({s: minmax[j] for j, s in enumerate(mm_rows)})
+    reds = (
+        jnp.stack([by_row[s] for s in range(S)])
+        if S
+        else jnp.zeros((0, num_buckets), jnp.float32)
+    )
+    return reds, cnts
+
+
+def segment_reduce_batch(
+    keys,
+    values: Sequence,  # S value rows, f32[n]
+    valids: Sequence,  # V validity rows, bool[n]
+    num_buckets: int,
+    modes: Sequence[str],  # len S
+    valid_idx: Sequence[int],  # len S, value row -> valid row
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched segment reduction: every agg of one groupby in one call.
+
+    Returns ``(reds (S, nb), counts (V, nb))`` where ``reds[s]`` reduces
+    ``values[s]`` over ``keys`` restricted to ``valids[valid_idx[s]]`` with
+    ``modes[s]``, and ``counts[v]`` counts valid rows per bucket.  Validity
+    rows are shared (deduplicated by the caller) so unmasked agg columns do
+    not pay for per-column count passes.  Rows pad to a shared shape bucket.
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    n = keys.shape[0]
+    nb = pad_len(n)
+    keys = _pad1(keys, nb, 0)
+    values = tuple(_pad1(jnp.asarray(v, jnp.float32), nb, 0.0) for v in values)
+    valids = tuple(_pad1(jnp.asarray(m, bool), nb, False) for m in valids)
+    b = backend()
+    if b == "xla":
+        # exact bucket count: the GEMM width is the dominant cost and XLA
+        # needs no lane alignment (the pallas path below keeps 128-rounding)
+        reds, cnts = _segment_batch_xla(
+            keys, values, valids, int(num_buckets),
+            tuple(modes), tuple(int(i) for i in valid_idx), min(_TILE, nb),
+        )
+        return reds, cnts
+    nbuckets = max(128, -(-int(num_buckets) // 128) * 128)
+    interp = b == "interpret"
+    red_rows = [
+        _segment_pallas(
+            keys, values[s], valids[valid_idx[s]], nbuckets,
+            mode=modes[s], interpret=interp,
+        )[0][:num_buckets]
+        for s in range(len(values))
+    ]
+    cnt_rows = [
+        _segment_pallas(
+            keys, jnp.zeros_like(keys, jnp.float32), valids[v], nbuckets,
+            mode="sum", interpret=interp,
+        )[1][:num_buckets]
+        for v in range(len(valids))
+    ]
+    reds = jnp.stack(red_rows) if red_rows else jnp.zeros((0, num_buckets))
+    return reds, jnp.stack(cnt_rows)

@@ -1,0 +1,327 @@
+"""Backend parity: the kernel-dispatch frame backends (xla / interpret) must
+agree with the scalar numpy reference on every blocking partial, including
+null-masked columns — and the scheduler's memoised graph walks must stay
+coherent under DAG growth and cache eviction.
+
+The accelerated backends accumulate in float32, so numeric agreement is to
+~1e-4 relative; structural results (keys, row selections, orderings, counts)
+must match exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CostModel, DAG, Scheduler
+from repro.frame import Session, from_pydict
+from repro.frame import backend as BK
+from repro.frame import blocking as B
+
+CPU_BACKENDS = ["numpy", "xla", "interpret"]
+KERNEL_BACKENDS = ["xla", "interpret"]
+
+AGGS = (
+    ("s", "x", "sum"),
+    ("m", "y", "mean"),
+    ("c", "y", "count"),
+    ("mn", "x", "min"),
+    ("mx", "x", "max"),
+)
+
+
+@pytest.fixture(scope="module")
+def table():
+    rng = np.random.default_rng(42)
+    n = 6_000
+    y = rng.uniform(0, 10, n)
+    y[rng.random(n) < 0.3] = np.nan  # masked column
+    return from_pydict(
+        {
+            "x": rng.normal(5, 2, n),
+            "y": y,
+            "k": rng.choice(np.array(["a", "b", "c", "d", "e", "f"]), n),
+            "i": rng.integers(0, 50, n),
+            "f32": rng.normal(0, 1, n).astype(np.float32),
+            "big": rng.integers(2**40, 2**41, n),  # > f32's exact-int range
+        },
+        npartitions=4,
+    )
+
+
+def _stats_close(a, b):
+    assert a.n == b.n
+    np.testing.assert_allclose(b.mean, a.mean, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(b.std, a.std, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(b.mn, a.mn, rtol=1e-5)
+    np.testing.assert_allclose(b.mx, a.mx, rtol=1e-5)
+
+
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+def test_describe_stats_parity(table, backend):
+    for part in table.partitions:
+        ref = B.partial_stats(part)
+        got = BK.partial_stats(part, backend=backend)
+        assert set(got) == set(ref)
+        for name in ref:
+            _stats_close(ref[name], got[name])
+    # merged across partitions (the combine path)
+    merged_ref = B.merge_stats([B.partial_stats(p) for p in table.partitions])
+    merged_got = B.merge_stats(
+        [BK.partial_stats(p, backend=backend) for p in table.partitions]
+    )
+    for name in merged_ref:
+        _stats_close(merged_ref[name], merged_got[name])
+
+
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+def test_groupby_agg_parity(table, backend):
+    dictionary = table.partitions[0].columns["k"].dictionary
+    ref_parts = [B.partial_groupby(p, "k", AGGS) for p in table.partitions]
+    got_parts = [
+        BK.partial_groupby(p, "k", AGGS, backend=backend) for p in table.partitions
+    ]
+    for r, g in zip(ref_parts, got_parts):
+        np.testing.assert_array_equal(g["keys"], r["keys"])
+    ref = B.merge_groupby(ref_parts, "k", AGGS, dictionary).to_pydict()
+    got = B.merge_groupby(got_parts, "k", AGGS, dictionary).to_pydict()
+    np.testing.assert_array_equal(got["k"], ref["k"])
+    for col in ("s", "m", "c", "mn", "mx"):
+        np.testing.assert_allclose(
+            np.asarray(got[col], np.float64),
+            np.asarray(ref[col], np.float64),
+            rtol=1e-4,
+            err_msg=col,
+        )
+
+
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+def test_value_counts_parity(table, backend):
+    for part in table.partitions:
+        rv, rc = B.partial_value_counts(part, "k")
+        gv, gc = BK.partial_value_counts(part, "k", backend=backend)
+        np.testing.assert_array_equal(gv, rv)
+        np.testing.assert_array_equal(gc, rc)
+
+
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+@pytest.mark.parametrize("by,ascending", [("x", True), ("x", False), ("y", True)])
+def test_topk_sort_parity(table, backend, by, ascending):
+    k = 12
+    for part in table.partitions:
+        ref_part, ref_samples = B.partial_sort(part, by, ascending, k)
+        got_part, got_samples = BK.partial_sort(part, by, ascending, k, backend=backend)
+        assert got_part.nrows == ref_part.nrows == k
+        # exact row selection and order (threshold trick must be lossless)
+        for col in part.order:
+            np.testing.assert_array_equal(
+                got_part.columns[col].data, ref_part.columns[col].data, err_msg=col
+            )
+        np.testing.assert_allclose(got_samples, ref_samples)
+
+
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+def test_filter_compaction_parity(table, backend):
+    """Row selection is value-exact on every backend: f32 and dictionary
+    codes ride the compaction kernel, lossy dtypes (f64, int64 > 2^24) take
+    the numpy gather — either way values must match bit-for-bit."""
+    for part in table.partitions:
+        keep = np.asarray(part.columns["x"].data) > 5.0
+        ref = part.select_rows(keep)
+        got = BK.select_rows(part, keep, backend=backend)
+        assert got.nrows == ref.nrows == int(keep.sum())
+        for col in part.order:
+            rc, gc = ref.columns[col], got.columns[col]
+            assert gc.data.dtype == rc.data.dtype, col
+            np.testing.assert_array_equal(gc.data, rc.data, err_msg=col)
+            np.testing.assert_array_equal(gc.valid_mask(), rc.valid_mask(), err_msg=col)
+
+
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+def test_topk_sort_nan_keys_fall_back(backend):
+    """Unmasked NaN sort keys (e.g. a merge_groupby mean output) must not
+    poison the top-k threshold — the kernel path defers to numpy."""
+    # from_pydict would mask the NaNs; build the column with raw NaN, no mask
+    from repro.frame.table import Column, Partition
+
+    raw = Partition(
+        {"x": Column(data=np.array([5.0, np.nan, 1.0, 3.0, 2.0, 4.0, np.nan, 0.5]))}
+    )
+    ref_part, _ = B.partial_sort(raw, "x", False, 3)
+    got_part, _ = BK.partial_sort(raw, "x", False, 3, backend=backend)
+    assert got_part.nrows == ref_part.nrows == 3
+    np.testing.assert_array_equal(got_part.columns["x"].data, ref_part.columns["x"].data)
+
+
+def test_numpy_fallbacks():
+    """Unsupported shapes silently fall back to the scalar path."""
+    t = from_pydict({"x": np.arange(10.0), "k": np.array(list("ababababab"))})
+    p = t.partitions[0]
+    # callable agg: not kernel-eligible
+    got = BK.partial_groupby(p, "k", (("u", "x", lambda v: float(np.median(v))),),
+                             backend="xla")
+    ref = B.partial_groupby(p, "k", (("u", "x", lambda v: float(np.median(v))),))
+    np.testing.assert_array_equal(got["keys"], ref["keys"])
+    # non-dictionary value_counts: falls back
+    gv, gc = BK.partial_value_counts(p, "x", backend="xla")
+    rv, rc = B.partial_value_counts(p, "x")
+    np.testing.assert_array_equal(gv, rv)
+    np.testing.assert_array_equal(gc, rc)
+    # limit > TOPK_MAX_K: falls back
+    sp, _ = BK.partial_sort(p, "x", True, BK.TOPK_MAX_K + 1, backend="xla")
+    rp, _ = B.partial_sort(p, "x", True, BK.TOPK_MAX_K + 1)
+    np.testing.assert_array_equal(sp.columns["x"].data, rp.columns["x"].data)
+
+
+def test_backend_resolution_order(monkeypatch):
+    pol = BK.BackendPolicy(engine_default="interpret")
+    monkeypatch.delenv(BK.ENV_VAR, raising=False)
+    assert pol.resolve() == "interpret"  # engine config
+    monkeypatch.setenv(BK.ENV_VAR, "xla")
+    assert pol.resolve() == "xla"  # env beats engine config
+    with BK.use_backend("numpy"):
+        assert pol.resolve() == "numpy"  # global beats env
+        assert pol.resolve("xla") == "xla"  # per-call beats everything
+    assert pol.resolve() == "xla"
+    with pytest.raises(ValueError):
+        pol.resolve("cuda")
+
+
+def _run_program(catalog, backend):
+    s = Session(catalog=catalog, mode="sim", kernel_backend=backend)
+    df = s.read_table("small")
+    df = df[df["x"] > 2.0]
+    return {
+        "describe": s.show(df.describe()).to_pydict(),
+        "group": s.show(df.groupby("k").mean()).to_pydict(),
+        "vc": s.show(df["k"].value_counts()).to_pydict(),
+    }
+
+
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+def test_end_to_end_session_parity(catalog, backend):
+    """Same notebook program through the engine on each CPU-capable backend:
+    kernel-dispatch answers match the scalar numpy baseline."""
+    ref = _run_program(catalog, "numpy")
+    got = _run_program(catalog, backend)
+    for q in ref:
+        assert set(got[q]) == set(ref[q])
+        for col in ref[q]:
+            r = np.asarray(ref[q][col])
+            g = np.asarray(got[q][col])
+            if r.dtype.kind in "OU":  # dictionary-decoded strings
+                np.testing.assert_array_equal(g, r, err_msg=f"{q}/{col}")
+            else:
+                np.testing.assert_allclose(
+                    g.astype(np.float64),
+                    r.astype(np.float64),
+                    rtol=2e-3,
+                    atol=1e-5,
+                    err_msg=f"{q}/{col}",
+                )
+
+
+def test_unit_times_feed_calibration(catalog):
+    """Frame units record measured (op, backend, rows, seconds) samples, and
+    calibrate() turns them into per-backend unit costs the estimator uses."""
+    s = Session(catalog=catalog, mode="sim", kernel_backend="numpy")
+    df = s.read_table("small")
+    s.show(df.describe())
+    cm = s.engine.cost_model
+    samples = cm.samples()
+    assert ("describe", "numpy") in samples
+    rows = sum(r for r, _ in samples[("describe", "numpy")])
+    assert rows == 5_000  # every partition's rows were measured
+    fitted = cm.calibrate()
+    assert fitted[("describe", "numpy")] > 0
+    cm.active_backend = "numpy"
+    assert cm.unit_cost("describe") == fitted[("describe", "numpy")]
+    # unknown backend falls through to the EWMA/default path
+    assert cm.unit_cost("describe", backend="pallas") != fitted[("describe", "numpy")]
+
+
+# --------------------------------------------------------------------------- #
+# scheduler memoisation                                                        #
+# --------------------------------------------------------------------------- #
+
+
+def _chain(dag, n, cost=1.0):
+    nodes, prev = [], None
+    for i in range(n):
+        prev = dag.add(
+            "synthetic", parents=[prev] if prev else [], kwargs={"cost_s": cost, "tag": str(i)}
+        )
+        nodes.append(prev)
+    return nodes
+
+
+def test_scheduler_cache_invalidated_on_dag_growth():
+    dag = DAG()
+    nodes = _chain(dag, 4)
+    sched = Scheduler(dag=dag, cost_model=CostModel(), policy="utility")
+    u_before = sched.utility(nodes[0], set())
+    assert sched._desc_cache  # memo populated
+    # growing the DAG must invalidate: the new descendant adds utility
+    tail = dag.add("synthetic", parents=[nodes[-1]], kwargs={"cost_s": 5.0, "tag": "t"})
+    u_after = sched.utility(nodes[0], set())
+    assert u_after > u_before
+    assert tail.nid in {n.nid for n in sched._descendants(nodes[0])}
+
+
+def test_scheduler_cache_invalidated_on_eviction():
+    """Shrinking the executed set (cache eviction) must invalidate the
+    delivery-cost memo: evicted nodes cost again."""
+    dag = DAG()
+    nodes = _chain(dag, 3)
+    sched = Scheduler(dag=dag, cost_model=CostModel(), policy="utility")
+    done = {n.nid for n in nodes[:2]}
+    u_done = sched.utility(nodes[2], done)
+    u_evicted = sched.utility(nodes[2], set())  # everything evicted
+    assert u_evicted > u_done
+    # and back again: memo keyed on the executed set, not stale
+    assert sched.utility(nodes[2], done) == u_done
+
+
+def test_scheduler_pick_results_unchanged_by_memo():
+    """Memoised pick() returns the same greedy order as a fresh scheduler."""
+    rng = np.random.default_rng(3)
+    dag = DAG()
+    nodes = []
+    for i in range(15):
+        parents = (
+            list(rng.choice(nodes, size=min(len(nodes), int(rng.integers(0, 3))),
+                            replace=False))
+            if nodes
+            else []
+        )
+        nodes.append(
+            dag.add("synthetic", parents=parents,
+                    kwargs={"cost_s": float(rng.uniform(0.5, 2.0)), "tag": str(i)})
+        )
+    cm = CostModel()
+    memo = Scheduler(dag=dag, cost_model=cm, policy="utility")
+    order, done = [], set()
+    while True:
+        nxt = memo.pick(done)
+        if nxt is None:
+            break
+        # a fresh scheduler (cold caches) must agree at every step
+        fresh = Scheduler(dag=dag, cost_model=cm, policy="utility")
+        assert fresh.pick(done).nid == nxt.nid
+        order.append(nxt.nid)
+        done.add(nxt.nid)
+    assert len(order) == len(dag)
+
+
+def test_real_mode_background_busy_accrues(catalog):
+    """The real-mode worker accounts its busy time (regression: += 0.0)."""
+    import time as _time
+
+    s = Session(catalog=catalog, mode="real")
+    df = s.read_table("small")
+    df.describe()  # specified, never displayed → background work
+    s.engine.start_background()
+    deadline = _time.monotonic() + 5.0
+    while _time.monotonic() < deadline:
+        if s.engine.metrics.background_busy_s > 0:
+            break
+        _time.sleep(0.01)
+    s.engine.stop_background()
+    assert s.engine.metrics.background_busy_s > 0

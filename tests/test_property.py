@@ -1,6 +1,9 @@
 """Hypothesis property tests for the system's invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra: pip install -r requirements-dev.txt")
+
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
