@@ -34,6 +34,7 @@ from repro.frame import from_pydict
 from repro.frame.table import Partition
 
 N_CATEGORIES = 64
+N_JOIN_KEYS = 1024  # broadcast dim-table size for the join probe
 # the paper's canonical blocking interaction: df.groupby(k).mean() (Fig. 2)
 AGGS = (
     ("x", "x", "mean"),
@@ -55,17 +56,34 @@ def make_partition(nrows: int, seed: int = 0) -> Partition:
             "y": y.astype(np.float32),
             "z": rng.exponential(1.0, nrows).astype(np.float32),
             "k": cats[rng.integers(0, N_CATEGORIES, nrows)],
+            # fact-table foreign key; 20% of the id space misses the dim table
+            "id": rng.integers(0, N_JOIN_KEYS + N_JOIN_KEYS // 4, nrows),
         },
         npartitions=1,
     )
     return table.partitions[0]
 
 
+def make_dim(seed: int = 1):
+    rng = np.random.default_rng(seed)
+    return from_pydict(
+        {
+            "id": np.arange(N_JOIN_KEYS, dtype=np.int64),
+            "w": rng.normal(0.0, 1.0, N_JOIN_KEYS).astype(np.float32),
+        }
+    )
+
+
+DIM = make_dim()
+
+
 # --- workloads: op name -> (cost-model op class, fn(part, backend)) ----------
 
 
 def _describe(part, bk):
-    return BK.partial_stats(part, backend=bk)
+    # pinned column set: keeps the row comparable across runs even as the
+    # bench table grows columns for other workloads
+    return BK.partial_stats(part, cols=("x", "y", "z"), backend=bk)
 
 
 def _groupby(part, bk):
@@ -80,6 +98,14 @@ def _topk_sort(part, bk):
     return BK.partial_sort(part, "x", True, 32, backend=bk)
 
 
+def _full_sort(part, bk):
+    return BK.partial_sort(part, "x", True, None, backend=bk)
+
+
+def _join_inner(part, bk):
+    return BK.join_partition(part, DIM, "id", "inner", backend=bk)
+
+
 def _filter_select(part, bk):
     keep = np.asarray(part.columns["x"].data) > 5.0
     return BK.select_rows(part, keep, backend=bk)
@@ -90,6 +116,8 @@ WORKLOADS: Dict[str, tuple] = {
     "groupby_partial": ("groupby_agg", _groupby),
     "value_counts_partial": ("value_counts", _value_counts),
     "topk_sort_partial": ("sort_values", _topk_sort),
+    "full_sort_partial": ("sort_values", _full_sort),
+    "join_partial": ("join", _join_inner),
     "filter_select": ("filter", _filter_select),
 }
 

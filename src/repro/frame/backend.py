@@ -12,6 +12,9 @@ frame partial             kernel
 ``partial_groupby``       ``segment_reduce`` (dictionary-coded keys)
 ``partial_value_counts``  ``segment_reduce`` (counts only)
 ``partial_sort(limit=k)`` ``topk`` (threshold + small residual argsort)
+``partial_sort`` (full)   ``argsort_f64`` (exact 3×f32 split + ``lax.sort``)
+``merge_sort`` (full)     sample-sort range split + ``argsort_f64``
+``join_partition``        ``join_probe`` (sorted right side, counting probe)
 ``select_rows``           ``filter_compact`` (per-column compaction)
 ========================  =============================================
 
@@ -46,7 +49,7 @@ import numpy as np
 from ..kernels import ops
 from . import blocking as B
 from .blocking import BUILTIN_AGGS, ColStats
-from .table import Column, Partition
+from .table import Column, Partition, PTable
 
 BACKENDS = ("numpy", "xla", "interpret", "pallas")
 ENV_VAR = "REPRO_FRAME_BACKEND"
@@ -290,10 +293,31 @@ def partial_value_counts(
 
 
 # --------------------------------------------------------------------------- #
-# limit-sort — topk threshold + residual argsort                               #
+# sort — full: exact-split lax.sort; limit: topk threshold + residual argsort  #
 # --------------------------------------------------------------------------- #
 
 TOPK_MAX_K = 128  # the kernel runs k (max, mask) rounds; beyond this, numpy
+
+
+def _sort_keys(key_col: Column, ascending: bool) -> np.ndarray:
+    """f64 sort keys with the numpy reference's null handling (nulls last)."""
+    keys = np.asarray(key_col.data, np.float64)
+    if key_col.mask is not None:
+        m = np.asarray(key_col.mask)
+        keys = np.where(m, keys, np.inf if ascending else -np.inf)
+    return keys
+
+
+def _sort_keys_exact(keys: np.ndarray) -> bool:
+    """True when the 3×f32 split orders ``keys`` exactly: no unmasked NaN (no
+    total order to reproduce — numpy's argsort parks them last) and no finite
+    magnitude that would overflow the f32 ``hi`` component to ±inf."""
+    if np.isnan(keys).any():
+        return False
+    finite = np.isfinite(keys)
+    if not finite.any():
+        return True
+    return bool(np.abs(keys[finite]).max() < np.finfo(np.float32).max)
 
 
 def partial_sort(
@@ -306,19 +330,59 @@ def partial_sort(
 ) -> Tuple[Partition, np.ndarray]:
     bk = active_backend(backend)
     key_col = part.columns.get(by)
-    if (
-        bk == "numpy"
-        or limit is None
-        or not (1 <= limit <= TOPK_MAX_K)
-        or key_col is None
-        or key_col.is_string
-        or part.nrows <= limit
-    ):
+    if bk == "numpy" or key_col is None or part.nrows == 0:
         return B.partial_sort(part, by, ascending, limit, n_samples)
-    keys = np.asarray(key_col.data, np.float64)
-    if key_col.mask is not None:
-        m = np.asarray(key_col.mask)
-        keys = np.where(m, keys, np.inf if ascending else -np.inf)
+    if limit is None:
+        return _partial_sort_full(part, key_col, by, ascending, n_samples, bk)
+    return _partial_sort_limit(part, key_col, by, ascending, limit, n_samples, bk)
+
+
+def _sorted_result(
+    part: Partition, keys: np.ndarray, idx: np.ndarray, n_samples: int
+) -> Tuple[Partition, np.ndarray]:
+    sorted_part = part.take(idx)
+    skeys = keys[idx]
+    if len(skeys) == 0:
+        samples = np.array([])
+    else:
+        samples = skeys[
+            np.linspace(0, len(skeys) - 1, min(n_samples, len(skeys))).astype(int)
+        ]
+    return sorted_part, samples
+
+
+def _partial_sort_full(
+    part: Partition,
+    key_col: Column,
+    by: str,
+    ascending: bool,
+    n_samples: int,
+    bk: str,
+) -> Tuple[Partition, np.ndarray]:
+    """Full (non-limit) partition sort: one jit'd multi-key ``lax.sort`` over
+    the exactly-split f64 keys — bit-for-bit the numpy stable argsort,
+    including null-last ordering and ties (dictionary codes sort string
+    columns, since `from_pydict` dictionaries are sorted)."""
+    keys = _sort_keys(key_col, ascending)
+    if not _sort_keys_exact(keys):
+        return B.partial_sort(part, by, ascending, None, n_samples)
+    with _kernel(bk):
+        order = np.asarray(ops.argsort_f64(keys if ascending else -keys))
+    return _sorted_result(part, keys, order, n_samples)
+
+
+def _partial_sort_limit(
+    part: Partition,
+    key_col: Column,
+    by: str,
+    ascending: bool,
+    limit: int,
+    n_samples: int,
+    bk: str,
+) -> Tuple[Partition, np.ndarray]:
+    if not (1 <= limit <= TOPK_MAX_K) or key_col.is_string or part.nrows <= limit:
+        return B.partial_sort(part, by, ascending, limit, n_samples)
+    keys = _sort_keys(key_col, ascending)
     if np.isnan(keys).any():
         # unmasked NaN keys (e.g. a merge_groupby mean output): lax.top_k
         # treats NaN as maximal and would poison the threshold, silently
@@ -333,15 +397,146 @@ def partial_sort(
     cand = np.nonzero(kf32 <= kth if ascending else kf32 >= kth)[0]
     order_local = np.argsort(keys[cand] if ascending else -keys[cand], kind="stable")
     idx = cand[order_local][:limit]
-    sorted_part = part.take(idx)
-    skeys = keys[idx]
-    if len(skeys) == 0:
-        samples = np.array([])
+    return _sorted_result(part, keys, idx, n_samples)
+
+
+def merge_sort(
+    partials: Sequence[Tuple[Partition, np.ndarray]],
+    by: str,
+    ascending: bool,
+    limit: Optional[int],
+    backend: Optional[str] = None,
+) -> "PTable":
+    """Combine step of a full sort as a *sample sort* (paper §5.1): pick
+    pivots from the partials' key samples, range-split every (already sorted)
+    partition with one vectorised ``searchsorted``, then order each range with
+    the same exact-split device argsort.  Ranges partition rows purely by key
+    value, so equal keys never straddle a boundary and stable in-range sorting
+    reproduces the global stable merge bit-for-bit — while each range sorts
+    nearly-sorted runs of ~n/p rows instead of one n-row ``np.argsort``.
+
+    Falls back to the numpy merge for limit-sorts (tiny inputs), ≤1 non-empty
+    partial, or keys outside the exact-split envelope."""
+    bk = active_backend(backend)
+    if bk == "numpy" or limit is not None:
+        return B.merge_sort(partials, by, ascending, limit)
+    parts = [p for p, _ in partials if p.nrows > 0]
+    if len(parts) <= 1:
+        return B.merge_sort(partials, by, ascending, limit)
+    keys: List[np.ndarray] = []
+    for p in parts:
+        k = _sort_keys(p.columns[by], ascending)
+        if not _sort_keys_exact(k):
+            return B.merge_sort(partials, by, ascending, limit)
+        keys.append(k if ascending else -k)  # sign-adjusted: each ascending
+    samples = [np.asarray(s, np.float64) for _, s in partials if len(s)]
+    if not samples:
+        return B.merge_sort(partials, by, ascending, limit)
+    sall = np.sort(np.concatenate(samples) if ascending else -np.concatenate(samples))
+    nparts = len(parts)
+    pivots = sall[np.linspace(0, len(sall) - 1, nparts + 1).astype(int)[1:-1]]
+    splits = [np.searchsorted(k, pivots, side="left") for k in keys]
+    out_parts: List[Partition] = []
+    for r in range(nparts):
+        slices: List[Partition] = []
+        skeys: List[np.ndarray] = []
+        for p, k, sp in zip(parts, keys, splits):
+            a = int(sp[r - 1]) if r > 0 else 0
+            b = int(sp[r]) if r < nparts - 1 else p.nrows
+            if b > a:
+                slices.append(p.slice(a, b))
+                skeys.append(k[a:b])
+        if not slices:
+            continue
+        chunk = PTable(slices).concat()
+        with _kernel(bk):
+            order = np.asarray(ops.argsort_f64(np.concatenate(skeys)))
+        out_parts.append(chunk.take(order))
+    return PTable(out_parts or [parts[0].slice(0, 0)])
+
+
+# --------------------------------------------------------------------------- #
+# join — sorted right side built once, device-resident; counting probe        #
+# --------------------------------------------------------------------------- #
+
+_JOIN_INT_EXACT = 1 << 24  # f32 integer-exact range
+
+
+def _join_keys_exact(col: Column) -> bool:
+    """Key columns the f32 probe compares exactly: integers within f32's
+    2^24 exact range and native float32.  String keys fall back to numpy —
+    dictionary codes are per-table, so cross-table equality needs the decoded
+    strings.  float64 keys fall back too (fractional values may not survive
+    the f32 cast).  The verdict is cached on the (immutable) Column so
+    think-time re-probes skip the O(n) min/max host scan — same pattern as
+    the `_dev_*` device cache."""
+    cached = col.__dict__.get("_join_exact")
+    if cached is not None:
+        return cached
+    if col.is_string:
+        ok = False
     else:
-        samples = skeys[
-            np.linspace(0, len(skeys) - 1, min(n_samples, len(skeys))).astype(int)
-        ]
-    return sorted_part, samples
+        d = np.asarray(col.data)
+        if d.dtype.kind in "iu":
+            ok = d.size == 0 or bool(
+                int(d.min()) > -_JOIN_INT_EXACT and int(d.max()) < _JOIN_INT_EXACT
+            )
+        else:
+            ok = d.dtype == np.float32
+    col.__dict__["_join_exact"] = ok
+    return ok
+
+
+def _join_build_cached(right: "PTable", on: str):
+    """Build phase, cached on the (immutable) right PTable: merge + sort +
+    uniqueness check once, plus the padded f32 device copy of the sorted keys
+    — the broadcast side stays device-resident across every left partition
+    and every think-time re-probe.  ``None`` marks a right side whose keys
+    the kernel cannot compare exactly (callers fall back to numpy)."""
+    cache = right.__dict__.setdefault("_join_build", {})
+    if on in cache:
+        return cache[on]
+    rmerged, r_sorted, r_order = B.join_build(right, on)
+    if not _join_keys_exact(rmerged.columns[on]):
+        entry = None
+    else:
+        entry = (rmerged, r_sorted, r_order, jnp.asarray(r_sorted.astype(np.float32)))
+    cache[on] = entry
+    return entry
+
+
+def join_partition(
+    left: Partition,
+    right: "PTable",
+    on: str,
+    how: str = "inner",
+    backend: Optional[str] = None,
+) -> Partition:
+    bk = active_backend(backend)
+    lcol = left.columns.get(on)
+    if (
+        bk == "numpy"
+        or how not in ("inner", "left")
+        or lcol is None
+        or left.nrows == 0
+        or not _join_keys_exact(lcol)
+    ):
+        return B.join_partition(left, right, on, how)
+    build = _join_build_cached(right, on)
+    if build is None:
+        return B.join_partition(left, right, on, how)
+    rmerged, r_sorted, r_order, r_dev = build
+    if len(r_sorted) == 0:
+        hit = np.zeros(left.nrows, dtype=bool)
+        gather = np.zeros(left.nrows, dtype=np.intp)
+    else:
+        with _kernel(bk):
+            pos, hit = ops.join_probe_padded(r_dev, _dev_f32(lcol))
+        hit = np.asarray(hit)
+        gather = r_order[np.asarray(pos)]
+    if lcol.mask is not None:
+        hit = hit & np.asarray(lcol.mask)  # null left keys never match
+    return B.join_assemble(left, rmerged, gather, hit, how, on)
 
 
 # --------------------------------------------------------------------------- #

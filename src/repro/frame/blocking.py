@@ -354,45 +354,90 @@ def merge_sort(
 # --------------------------------------------------------------------------- #
 
 
-def join_partition(
-    left: Partition, right: PTable, on: str, how: str = "inner"
-) -> Partition:
+def join_build(right: PTable, on: str) -> Tuple[Partition, np.ndarray, np.ndarray]:
+    """Build phase of the broadcast join: merge the right side and sort its
+    keys once.  Rows with a *null* key are excluded from the build — they can
+    never match (pandas semantics) — and uniqueness is required among the
+    remaining keys (dim-table join).
+
+    Returns ``(rmerged, r_sorted, r_order)`` where ``r_sorted`` is the
+    ascending valid key array and ``r_order[i]`` is the row index in
+    ``rmerged`` holding ``r_sorted[i]``.
+    """
     rmerged = right.concat()
-    rkeys_np = _decode_keys(rmerged.columns[on])
-    lkeys_np = _decode_keys(left.columns[on])
-    r_order = np.argsort(rkeys_np, kind="stable")
-    r_sorted = rkeys_np[r_order]
+    kcol = rmerged.columns[on]
+    rkeys = _decode_keys(kcol)
+    ridx = np.nonzero(np.asarray(kcol.valid_mask()))[0]
+    order_local = np.argsort(rkeys[ridx], kind="stable")
+    r_sorted = rkeys[ridx][order_local]
     if len(np.unique(r_sorted)) != len(r_sorted):
         raise ValueError("join: right-side keys must be unique (dim-table join)")
-    pos = np.searchsorted(r_sorted, lkeys_np)
-    pos = np.clip(pos, 0, max(len(r_sorted) - 1, 0))
-    matched = len(r_sorted) > 0 and True
-    hit = (r_sorted[pos] == lkeys_np) if len(r_sorted) else np.zeros(len(lkeys_np), bool)
-    gather = r_order[pos]
+    return rmerged, r_sorted, ridx[order_local]
+
+
+def join_assemble(
+    left: Partition,
+    rmerged: Partition,
+    gather: np.ndarray,
+    hit: np.ndarray,
+    how: str,
+    on: str,
+) -> Partition:
+    """Shared tail of every join path (numpy probe and kernel probe): row
+    selection plus the right-column gather.  ``gather`` holds in-range row
+    indices into ``rmerged``; rows with ``hit`` False are forced to index 0 so
+    every backend assembles bit-identical partitions."""
     if how == "inner":
-        keep = np.where(hit)[0]
-        out = left.take(np.asarray(keep))
+        keep = np.nonzero(hit)[0]
+        out = left.take(keep)
         gather = gather[keep]
         hit = hit[keep]
     elif how == "left":
         out = left
     else:
         raise ValueError(f"unsupported join how={how!r}")
+    gather = np.where(hit, gather, 0)
+    miss = ~np.asarray(hit)
     cols = dict(out.columns)
     order = list(out.order)
     for name in rmerged.order:
         if name == on:
             continue
         src = rmerged.columns[name]
-        taken = src.take(np.asarray(gather))
-        if how == "left":
-            miss = ~np.asarray(hit)
-            mask = taken.valid_mask() & ~miss
-            taken = Column(data=taken.data, mask=mask, dictionary=taken.dictionary)
+        if rmerged.nrows == 0:
+            # nothing to gather from: all-null columns of the output length
+            taken = Column(
+                data=np.zeros(out.nrows, dtype=src.data.dtype),
+                mask=np.zeros(out.nrows, dtype=bool),
+                dictionary=src.dictionary,
+            )
+        else:
+            taken = src.take(np.asarray(gather))
+            if how == "left":
+                mask = taken.valid_mask() & ~miss
+                taken = Column(data=taken.data, mask=mask, dictionary=taken.dictionary)
         out_name = name if name not in cols else f"{name}_right"
         cols[out_name] = taken
         order.append(out_name)
     return Partition(cols, order)
+
+
+def join_partition(
+    left: Partition, right: PTable, on: str, how: str = "inner"
+) -> Partition:
+    rmerged, r_sorted, r_order = join_build(right, on)
+    lkeys = _decode_keys(left.columns[on])
+    if len(r_sorted):
+        pos = np.clip(np.searchsorted(r_sorted, lkeys), 0, len(r_sorted) - 1)
+        hit = r_sorted[pos] == lkeys
+        gather = r_order[pos]
+    else:
+        hit = np.zeros(len(lkeys), dtype=bool)
+        gather = np.zeros(len(lkeys), dtype=np.intp)
+    lmask = left.columns[on].mask
+    if lmask is not None:
+        hit = hit & np.asarray(lmask)  # null left keys never match
+    return join_assemble(left, rmerged, gather, hit, how, on)
 
 
 def _decode_keys(col: Column) -> np.ndarray:

@@ -213,9 +213,14 @@ class FrameRuntime:
 
         def join_apply(node: Node, part: Partition, extras) -> Partition:
             right: PTable = extras[0]
-            return B.join_partition(
-                part, right, node.kwargs["on"], node.kwargs.get("how", "inner")
-            )
+            return self._timed(
+                node,
+                part.nrows,
+                lambda bk: BK.join_partition(
+                    part, right, node.kwargs["on"],
+                    node.kwargs.get("how", "inner"), backend=bk,
+                ),
+            )()
 
         eng.register_op("filter", make_pw(filter_apply))
         eng.register_op("filter_cmp", make_pw(filter_apply))
@@ -392,11 +397,12 @@ class FrameRuntime:
             ]
 
         def sort_combine(node, inputs, results):
-            return B.merge_sort(
+            return BK.merge_sort(
                 results,
                 node.kwargs["by"],
                 node.kwargs.get("ascending", True),
                 node.kwargs.get("limit"),
+                backend=self.backend_policy.resolve(),
             )
 
         eng.register_op(

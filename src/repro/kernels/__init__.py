@@ -7,6 +7,7 @@ wrappers used by library code.
 from . import ops, ref
 from .filter_compact import filter_compact
 from .flash_attention import flash_attention
+from .join_probe import join_probe
 from .masked_stats import masked_stats
 from .segment_reduce import segment_reduce
 from .ssd_chunk import ssd_chunk_scan
@@ -14,5 +15,5 @@ from .topk import topk
 
 __all__ = [
     "ops", "ref", "flash_attention", "segment_reduce", "masked_stats",
-    "filter_compact", "topk", "ssd_chunk_scan",
+    "filter_compact", "topk", "ssd_chunk_scan", "join_probe",
 ]

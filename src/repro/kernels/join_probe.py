@@ -1,0 +1,108 @@
+"""Sorted-lookup join probe (broadcast dim-table join, paper §5.1) for TPU.
+
+Hardware adaptation: a hash-table probe is a random gather — the access
+pattern TPUs are worst at.  With the (small, broadcast) right side sorted and
+resident in VMEM, the probe becomes *counting*: for each left key,
+
+    ``pos[i] = #{ j : r_sorted[j] < l_keys[i] }``   (== searchsorted-left)
+    ``hit[i] = any(r_sorted[j] == l_keys[i])``
+
+Per grid step we compare a (T,) tile of left keys against a (Bk,) block of
+right keys — a (T × Bk) broadcast compare on the VPU, reduced along the
+bucket axis and accumulated across right blocks (same blocked formulation as
+`segment_reduce`, with comparison matrices instead of one-hots).  No
+data-dependent control flow, no gather: the host gathers right columns once
+with the resulting positions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 1024  # left keys per grid step
+DEFAULT_RIGHT_BLOCK = 128  # right keys per block (lane-aligned)
+
+
+def _probe_kernel(
+    l_ref,  # (1, T) f32 left keys
+    r_ref,  # (1, Bk) f32 sorted right keys (NaN padded)
+    pos_ref,  # (1, T) i32 running counts
+    hit_ref,  # (1, T) i32 running any-equal (0/1)
+    *,
+    tile: int,
+    right_block: int,
+):
+    rb = pl.program_id(1)
+
+    @pl.when(rb == 0)
+    def _init():
+        pos_ref[...] = jnp.zeros_like(pos_ref)
+        hit_ref[...] = jnp.zeros_like(hit_ref)
+
+    lk = l_ref[0]  # (T,)
+    rk = r_ref[0]  # (Bk,)
+    lt = rk[None, :] < lk[:, None]  # (T, Bk)
+    eq = rk[None, :] == lk[:, None]
+    # int32 accumulation: f32 counts would round away increments past 2^24
+    # rows of right side, silently corrupting the gather positions
+    pos_ref[...] += jnp.sum(lt.astype(jnp.int32), axis=1)[None]
+    hit_ref[...] = jnp.maximum(
+        hit_ref[...], jnp.max(eq.astype(jnp.int32), axis=1)[None]
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile", "right_block", "interpret")
+)
+def join_probe(
+    l_keys: jnp.ndarray,  # f32[n]
+    r_sorted: jnp.ndarray,  # f32[m] ascending, unique among finite entries
+    tile: int = DEFAULT_TILE,
+    right_block: int = DEFAULT_RIGHT_BLOCK,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns ``(pos int32[n], hit bool[n])`` — searchsorted-left positions
+    of each left key in ``r_sorted`` and whether an exact match exists.
+
+    Pads are ``NaN`` on both sides: every comparison against NaN is false, so
+    pad entries never count toward ``pos`` and never match — which also means
+    the counting formulation (unlike a binary search) needs no care about
+    where pads land relative to real keys, and ``±inf`` *real* keys compare
+    exactly."""
+    n = l_keys.shape[0]
+    m = r_sorted.shape[0]
+    tile = min(tile, n)
+    pad_n = (-n) % tile
+    if pad_n:
+        l_keys = jnp.pad(l_keys, (0, pad_n), constant_values=jnp.nan)
+    right_block = min(right_block, m)
+    pad_m = (-m) % right_block
+    if pad_m:
+        r_sorted = jnp.pad(r_sorted, (0, pad_m), constant_values=jnp.nan)
+    nt = l_keys.shape[0] // tile
+    nrb = r_sorted.shape[0] // right_block
+
+    pos, hit = pl.pallas_call(
+        functools.partial(_probe_kernel, tile=tile, right_block=right_block),
+        grid=(nt, nrb),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda t, rb: (t, 0)),
+            pl.BlockSpec((1, right_block), lambda t, rb: (0, rb)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda t, rb: (t, 0)),
+            pl.BlockSpec((1, tile), lambda t, rb: (t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nt, tile), jnp.int32),
+            jax.ShapeDtypeStruct((nt, tile), jnp.int32),
+        ],
+        interpret=interpret,
+    )(l_keys.reshape(nt, tile), r_sorted.reshape(1, -1))
+    pos = pos.reshape(-1)[:n]
+    hit = hit.reshape(-1)[:n] > 0
+    return pos, hit

@@ -19,10 +19,12 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
 from .filter_compact import filter_compact as _filter_pallas
 from .flash_attention import flash_attention as _attn_pallas
+from .join_probe import join_probe as _probe_pallas
 from .masked_stats import masked_stats as _stats_pallas
 from .segment_reduce import segment_reduce as _segment_pallas
 from .ssd_chunk import ssd_chunk_scan as _ssd_pallas
@@ -233,6 +235,111 @@ def filter_compact_padded(x, keep, fill: float = 0.0) -> Tuple[jnp.ndarray, jnp.
     nb = pad_len(n)
     out, cnt = filter_compact(_pad1(x, nb, fill), _pad1(keep, nb, False), fill=fill)
     return out[:n], cnt
+
+
+# -- full sort: exact f64 ordering on the f32 datapath ------------------------
+#
+# TPUs sort f32; dataframe sort keys are f64 (or int64 cast through f64 by the
+# numpy reference).  Rounding keys to f32 would merge distinct keys into ties
+# and silently reorder rows relative to the reference.  Instead each f64 key is
+# split into THREE non-overlapping f32 components (Veltkamp-style residual
+# splitting):
+#
+#     hi  = RN32(x),  mid = RN32(x - hi),  lo = RN32(x - hi - mid)
+#
+# Every residual spans ≤ 29 significant bits, so both subtractions are exact
+# in f64 and ``x == hi + mid + lo`` exactly (3 × 24 bits ≥ the 53-bit f64
+# mantissa).  Because round-to-nearest is monotone, comparing ``(hi, mid, lo)``
+# lexicographically is equivalent to comparing ``x`` — so a stable multi-key
+# ``lax.sort`` over the three components reproduces numpy's stable f64 argsort
+# bit-for-bit.  Callers gate out non-finite-in-f32 magnitudes (|x| ≥ 2^128)
+# and unmasked NaNs, which have no total order to preserve.
+
+
+def split_f64(keys) -> Tuple:
+    """Host-side exact 3-way f32 split of f64 sort keys.
+
+    Non-finite keys (the ±inf null sentinels) keep ``hi`` and zero the
+    residual components — ``inf - inf`` is NaN and would poison the
+    lexicographic comparison."""
+    keys = np.asarray(keys, np.float64)
+    finite = np.isfinite(keys)
+    hi = keys.astype(np.float32)
+    r1 = np.zeros_like(keys)
+    np.subtract(keys, hi.astype(np.float64), out=r1, where=finite)
+    mid = r1.astype(np.float32)
+    lo = (r1 - mid.astype(np.float64)).astype(np.float32)
+    return hi, mid, lo
+
+
+@jax.jit
+def _sort_order_xla(hi: jnp.ndarray, mid: jnp.ndarray, lo: jnp.ndarray):
+    iota = jnp.arange(hi.shape[0], dtype=jnp.int32)
+    _, _, _, order = jax.lax.sort(
+        (hi, mid, lo, iota), num_keys=3, is_stable=True
+    )
+    return order
+
+
+def sort_order_padded(hi, mid, lo) -> jnp.ndarray:
+    """Ascending stable argsort of exactly-split f64 keys; returns int32
+    positions.  Rows pad to a shared shape bucket with ``(+inf, 0, 0)`` —
+    lexicographically after every real row (stability keeps real ``+inf``
+    null-sentinel rows, whose residuals are also zero, ahead of pads).
+
+    All kernel backends share the jit'd ``lax.sort``: XLA's sort *is* the
+    TPU-optimal implementation (the same bitonic network a hand-written
+    Mosaic kernel would emit), so unlike the reduction kernels there is no
+    separate Pallas path to dispatch to."""
+    hi = jnp.asarray(hi, jnp.float32)
+    n = hi.shape[0]
+    nb = pad_len(n)
+    hi = _pad1(hi, nb, jnp.inf)
+    mid = _pad1(jnp.asarray(mid, jnp.float32), nb, 0.0)
+    lo = _pad1(jnp.asarray(lo, jnp.float32), nb, 0.0)
+    return _sort_order_xla(hi, mid, lo)[:n]
+
+
+def argsort_f64(keys) -> jnp.ndarray:
+    """Stable ascending argsort of f64 keys, bit-for-bit equal to
+    ``np.argsort(keys, kind="stable")`` (callers must pre-filter NaN and
+    f32-overflowing magnitudes)."""
+    return sort_order_padded(*split_f64(keys))
+
+
+# -- sorted-lookup join probe -------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _join_probe_xla(r_sorted: jnp.ndarray, l_keys: jnp.ndarray, m: int):
+    pos = jnp.searchsorted(r_sorted, l_keys, side="left")
+    posc = jnp.clip(pos, 0, m - 1)
+    hit = r_sorted[posc] == l_keys
+    return posc, hit
+
+
+def join_probe_padded(r_sorted, l_keys) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Probe each left key against the (small, ascending, unique) sorted right
+    key array: returns ``(pos, hit)`` with ``pos`` clipped to ``[0, m-1]``
+    ready to gather right rows, and ``hit`` marking exact matches.  Left keys
+    pad to a shape bucket; the right side stays exact-shape (one build — and
+    one jit specialisation — per broadcast dim table).  NaN left keys probe as
+    misses on every backend."""
+    r_sorted = jnp.asarray(r_sorted, jnp.float32)
+    l_keys = jnp.asarray(l_keys, jnp.float32)
+    m = int(r_sorted.shape[0])
+    if m == 0:
+        raise ValueError("join_probe_padded: empty right side (caller gates)")
+    n = l_keys.shape[0]
+    nb = pad_len(n)
+    lp = _pad1(l_keys, nb, jnp.nan)
+    b = backend()
+    if b == "xla":
+        pos, hit = _join_probe_xla(r_sorted, lp, m)
+    else:
+        pos, hit = _probe_pallas(lp, r_sorted, interpret=(b == "interpret"))
+        pos = jnp.clip(pos, 0, m - 1)
+    return pos[:n], hit[:n]
 
 
 # -- batched groupby partials -------------------------------------------------

@@ -30,7 +30,7 @@ from ..models.base import ShardCtx, tree_specs_to_shapes
 from ..models.blocks import block_fwd, block_spec, init_block_cache
 from ..models.lm import forward, lm_loss
 from ..train.optimizer import AdamWConfig, adamw_update, init_opt_state
-from .roofline import collective_bytes_from_hlo
+from .roofline import collective_bytes_from_hlo, cost_analysis_dict
 from .specs import make_cache_specs, train_input_specs, decode_input_specs
 
 
@@ -55,7 +55,7 @@ class Cost:
 
 
 def _cost_of(compiled) -> Cost:
-    ca = compiled.cost_analysis()
+    ca = cost_analysis_dict(compiled)
     return Cost(
         flops=float(ca.get("flops", 0.0)),
         bytes=float(ca.get("bytes accessed", 0.0)),

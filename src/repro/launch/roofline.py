@@ -40,6 +40,16 @@ _COLLECTIVE_RE = re.compile(
 _SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` across jax versions: some return the
+    analysis dict directly, others (e.g. 0.4.x) wrap it in a one-element
+    list per executable."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def _shape_bytes(dtype: str, dims: str) -> int:
     n = 1
     for d in dims.split(","):

@@ -117,6 +117,177 @@ def test_topk_sort_parity(table, backend, by, ascending):
         np.testing.assert_allclose(got_samples, ref_samples)
 
 
+def _partitions_equal(got, ref):
+    """Bit-for-bit: same column order, same bytes, same validity."""
+    assert got.order == ref.order
+    for col in ref.order:
+        gc, rc = got.columns[col], ref.columns[col]
+        assert gc.data.dtype == rc.data.dtype, col
+        np.testing.assert_array_equal(gc.data, rc.data, err_msg=col)
+        np.testing.assert_array_equal(gc.valid_mask(), rc.valid_mask(), err_msg=col)
+
+
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+@pytest.mark.parametrize(
+    "by,ascending",
+    [("x", True), ("x", False), ("y", True), ("y", False), ("k", True), ("big", True)],
+)
+def test_full_sort_parity(table, backend, by, ascending):
+    """Full (non-limit) sort must agree bit-for-bit with numpy's stable f64
+    argsort — float keys, null-masked keys (nulls last), string keys (sorted
+    dictionary codes), and int64 beyond f32's range — through both the
+    per-partition partial and the sample-sort merge."""
+    refs = [B.partial_sort(p, by, ascending, None) for p in table.partitions]
+    gots = [
+        BK.partial_sort(p, by, ascending, None, backend=backend)
+        for p in table.partitions
+    ]
+    for (rp, rs), (gp, gs) in zip(refs, gots):
+        _partitions_equal(gp, rp)
+        np.testing.assert_array_equal(gs, rs)
+    mref = B.merge_sort(refs, by, ascending, None).concat()
+    mgot = BK.merge_sort(gots, by, ascending, None, backend=backend).concat()
+    _partitions_equal(mgot, mref)
+
+
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+def test_full_sort_fallbacks_match(backend):
+    """Keys outside the exact-split envelope (unmasked NaN; magnitudes that
+    overflow f32's hi component) defer to numpy — results still match."""
+    from repro.frame.table import Column, Partition
+
+    for raw in (
+        np.array([5.0, np.nan, 1.0, 3.0, 2.0, np.nan, 0.5]),
+        np.array([1e39, -2e39, 3.0, 1e39 / 2, 0.0]),
+    ):
+        part = Partition({"x": Column(data=raw)})
+        ref, _ = B.partial_sort(part, "x", True, None)
+        got, _ = BK.partial_sort(part, "x", True, None, backend=backend)
+        _partitions_equal(got, ref)
+
+
+# --------------------------------------------------------------------------- #
+# join                                                                         #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.fixture(scope="module")
+def dim_table():
+    rng = np.random.default_rng(7)
+    w = rng.normal(0, 1, 40)
+    w[::5] = np.nan  # null right values: gathered nulls stay null
+    return from_pydict(
+        {
+            "i": np.arange(40),  # matches ~80% of table's "i" in [0, 50)
+            "w": w,
+            "label": np.array([f"n{j}" for j in range(40)]),
+        }
+    )
+
+
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+@pytest.mark.parametrize("how", ["inner", "left"])
+def test_join_parity(table, dim_table, backend, how):
+    """Inner and left broadcast joins agree bit-for-bit with the numpy
+    reference: row selection, gathered right values, and the null masks for
+    left-join misses and null right-side values."""
+    for part in table.partitions:
+        ref = B.join_partition(part, dim_table, "i", how)
+        got = BK.join_partition(part, dim_table, "i", how, backend=backend)
+        _partitions_equal(got, ref)
+        if how == "left":
+            # keys 40..49 miss the dim table: the gathered columns are null
+            miss = np.asarray(part.columns["i"].data) >= 40
+            assert miss.any()
+            assert not got.columns["w"].valid_mask()[miss].any()
+
+
+@pytest.mark.parametrize("backend", CPU_BACKENDS)
+@pytest.mark.parametrize("how", ["inner", "left"])
+def test_join_empty_right(table, backend, how):
+    """Empty right table: inner drops every row, left nulls every gathered
+    column (regression: the probe used to index into an empty array)."""
+    empty = from_pydict({"i": np.array([], np.int64), "w": np.array([])})
+    part = table.partitions[0]
+    out = BK.join_partition(part, empty, "i", how, backend=backend)
+    assert out.order == list(part.order) + ["w"]
+    if how == "inner":
+        assert out.nrows == 0
+    else:
+        assert out.nrows == part.nrows
+        assert not out.columns["w"].valid_mask().any()
+        np.testing.assert_array_equal(
+            out.columns["i"].data, part.columns["i"].data
+        )
+
+
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+def test_join_string_keys_fall_back(backend):
+    """String join keys take the numpy path (dictionary codes are per-table,
+    so cross-table equality needs decoded strings) — and still match."""
+    left = from_pydict(
+        {"k": np.array(["a", "b", "z", "b"]), "x": np.arange(4.0)}
+    )
+    right = from_pydict(
+        {"k": np.array(["b", "a", "c"]), "v": np.array([10.0, 20.0, 30.0])}
+    )
+    for how in ("inner", "left"):
+        ref = B.join_partition(left.partitions[0], right, "k", how)
+        got = BK.join_partition(left.partitions[0], right, "k", how, backend=backend)
+        _partitions_equal(got, ref)
+    # decoded values are right: "z" misses, "b" maps to 10
+    out = BK.join_partition(left.partitions[0], right, "k", "left", backend=backend)
+    got_v = out.columns["v"].to_numpy()
+    np.testing.assert_array_equal(got_v[[0, 1, 3]], [20.0, 10.0, 10.0])
+    assert np.isnan(got_v[2])
+
+
+@pytest.mark.parametrize("backend", CPU_BACKENDS)
+def test_join_null_keys_never_match(backend):
+    """Null join keys never match (pandas semantics) — on the left they miss
+    (dropped by inner, nulled by left join); on the right they are excluded
+    from the build and do not trip the uniqueness check."""
+    from repro.frame.table import Column, Partition
+    from repro.frame.table import PTable
+
+    left = Partition(
+        {
+            "i": Column(
+                data=np.array([0, 1, 2, 1], np.int64),
+                mask=np.array([True, False, True, True]),
+            ),
+            "x": Column(data=np.arange(4.0)),
+        }
+    )
+    right = PTable(
+        [
+            Partition(
+                {
+                    "i": Column(
+                        data=np.array([0, 1, 1], np.int64),
+                        mask=np.array([True, True, False]),  # dup is null
+                    ),
+                    "w": Column(data=np.array([5.0, 6.0, 7.0])),
+                }
+            )
+        ]
+    )
+    # left row 1 (null key) and row 2 (key 2, absent from right) both miss
+    inner = BK.join_partition(left, right, "i", "inner", backend=backend)
+    np.testing.assert_array_equal(inner.columns["x"].data, [0.0, 3.0])
+    np.testing.assert_array_equal(inner.columns["w"].data, [5.0, 6.0])
+    lj = BK.join_partition(left, right, "i", "left", backend=backend)
+    np.testing.assert_array_equal(lj.columns["w"].valid_mask(),
+                                  [True, False, False, True])
+
+
+@pytest.mark.parametrize("backend", CPU_BACKENDS)
+def test_join_duplicate_right_keys_raise(table, backend):
+    dup = from_pydict({"i": np.array([1, 1, 2]), "w": np.arange(3.0)})
+    with pytest.raises(ValueError, match="unique"):
+        BK.join_partition(table.partitions[0], dup, "i", "inner", backend=backend)
+
+
 @pytest.mark.parametrize("backend", KERNEL_BACKENDS)
 def test_filter_compaction_parity(table, backend):
     """Row selection is value-exact on every backend: f32 and dictionary
@@ -187,11 +358,14 @@ def test_backend_resolution_order(monkeypatch):
 def _run_program(catalog, backend):
     s = Session(catalog=catalog, mode="sim", kernel_backend=backend)
     df = s.read_table("small")
+    dim = s.read_table("dim")
     df = df[df["x"] > 2.0]
     return {
         "describe": s.show(df.describe()).to_pydict(),
         "group": s.show(df.groupby("k").mean()).to_pydict(),
         "vc": s.show(df["k"].value_counts()).to_pydict(),
+        "sorted": s.show(df.sort_values("y", ascending=False)).to_pydict(),
+        "join": s.show(df.join(dim, on="j")).to_pydict(),
     }
 
 
@@ -216,6 +390,19 @@ def test_end_to_end_session_parity(catalog, backend):
                     atol=1e-5,
                     err_msg=f"{q}/{col}",
                 )
+
+
+def test_join_units_feed_calibration(catalog):
+    """Join partials record per-backend samples like every other blocking op,
+    so calibrate() can fit a unit cost for the probe path."""
+    s = Session(catalog=catalog, mode="sim", kernel_backend="xla")
+    df = s.read_table("small")
+    dim = s.read_table("dim")
+    s.show(df.join(dim, on="j"))
+    cm = s.engine.cost_model
+    assert ("join", "xla") in cm.samples()
+    fitted = cm.calibrate()
+    assert fitted[("join", "xla")] > 0
 
 
 def test_unit_times_feed_calibration(catalog):
