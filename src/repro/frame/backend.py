@@ -310,14 +310,23 @@ def _sort_keys(key_col: Column, ascending: bool) -> np.ndarray:
 
 def _sort_keys_exact(keys: np.ndarray) -> bool:
     """True when the 3×f32 split orders ``keys`` exactly: no unmasked NaN (no
-    total order to reproduce — numpy's argsort parks them last) and no finite
-    magnitude that would overflow the f32 ``hi`` component to ±inf."""
+    total order to reproduce — numpy's argsort parks them last), no finite
+    magnitude that would overflow the f32 ``hi`` component to ±inf, and the
+    split reconstructs every key exactly (``hi + mid + lo == x`` in f64).
+    The reconstruction check catches underflow: magnitudes on or below the
+    f32 subnormal grid (roughly |x| < 2^-100) lose residual bits, so distinct
+    tiny keys would collapse to identical components and sort as ties."""
     if np.isnan(keys).any():
         return False
     finite = np.isfinite(keys)
     if not finite.any():
         return True
-    return bool(np.abs(keys[finite]).max() < np.finfo(np.float32).max)
+    f = keys[finite]
+    if np.abs(f).max() >= np.finfo(np.float32).max:
+        return False
+    hi, mid, lo = ops.split_f64(f)
+    recon = hi.astype(np.float64) + mid.astype(np.float64) + lo.astype(np.float64)
+    return bool((recon == f).all())
 
 
 def partial_sort(
@@ -478,6 +487,9 @@ def _join_keys_exact(col: Column) -> bool:
     else:
         d = np.asarray(col.data)
         if d.dtype.kind in "iu":
+            # range-scan valid rows only: null rows hold arbitrary payloads
+            # that must not force the fallback (they never match anyway)
+            d = d[np.asarray(col.valid_mask())]
             ok = d.size == 0 or bool(
                 int(d.min()) > -_JOIN_INT_EXACT and int(d.max()) < _JOIN_INT_EXACT
             )

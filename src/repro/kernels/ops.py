@@ -247,13 +247,25 @@ def filter_compact_padded(x, keep, fill: float = 0.0) -> Tuple[jnp.ndarray, jnp.
 #
 #     hi  = RN32(x),  mid = RN32(x - hi),  lo = RN32(x - hi - mid)
 #
-# Every residual spans ≤ 29 significant bits, so both subtractions are exact
-# in f64 and ``x == hi + mid + lo`` exactly (3 × 24 bits ≥ the 53-bit f64
-# mantissa).  Because round-to-nearest is monotone, comparing ``(hi, mid, lo)``
-# lexicographically is equivalent to comparing ``x`` — so a stable multi-key
-# ``lax.sort`` over the three components reproduces numpy's stable f64 argsort
-# bit-for-bit.  Callers gate out non-finite-in-f32 magnitudes (|x| ≥ 2^128)
-# and unmasked NaNs, which have no total order to preserve.
+# When every component stays in f32's *normal* range, each residual spans
+# ≤ 29 significant bits, both subtractions are exact in f64, and
+# ``x == hi + mid + lo`` exactly (3 × 24 bits ≥ the 53-bit f64 mantissa).
+# Because round-to-nearest is monotone, comparing ``(hi, mid, lo)``
+# lexicographically is then equivalent to comparing ``x`` — so a stable
+# multi-key ``lax.sort`` over the three components reproduces numpy's stable
+# f64 argsort bit-for-bit.
+#
+# Exactness envelope: |x| = 0, or roughly 2^-100 < |x| < f32 max (≈ 2^128).
+# Above the top the ``hi`` component overflows to ±inf; near and below the
+# bottom the residuals land on (or under) f32's subnormal grid and lose bits,
+# so distinct tiny keys collapse to identical component triples and sort as
+# ties.  Callers must NOT rely on the magnitude bound alone: the backend gate
+# (``_sort_keys_exact``) re-splits the keys and verifies the f64 identity
+# ``hi + mid + lo == x`` for every key, falling back to numpy otherwise —
+# exact reconstruction plus monotone rounding at each stage is sufficient for
+# order equivalence (equal triples would reconstruct to one value, hence one
+# key).  Unmasked NaNs are also gated out: they have no total order to
+# preserve.
 
 
 def split_f64(keys) -> Tuple:
@@ -302,8 +314,10 @@ def sort_order_padded(hi, mid, lo) -> jnp.ndarray:
 
 def argsort_f64(keys) -> jnp.ndarray:
     """Stable ascending argsort of f64 keys, bit-for-bit equal to
-    ``np.argsort(keys, kind="stable")`` (callers must pre-filter NaN and
-    f32-overflowing magnitudes)."""
+    ``np.argsort(keys, kind="stable")``.  Precondition (see the envelope note
+    above): no NaN, and every key must survive the 3×f32 split exactly —
+    callers gate with ``_sort_keys_exact``, which rejects overflow (|x| ≥ f32
+    max) and underflow (|x| ≲ 2^-100) magnitudes."""
     return sort_order_padded(*split_f64(keys))
 
 

@@ -153,12 +153,16 @@ def test_full_sort_parity(table, backend, by, ascending):
 @pytest.mark.parametrize("backend", KERNEL_BACKENDS)
 def test_full_sort_fallbacks_match(backend):
     """Keys outside the exact-split envelope (unmasked NaN; magnitudes that
-    overflow f32's hi component) defer to numpy — results still match."""
+    overflow f32's hi component; underflowing magnitudes whose residuals land
+    below the f32 subnormal grid and collapse to ties) defer to numpy —
+    results still match."""
     from repro.frame.table import Column, Partition
 
     for raw in (
         np.array([5.0, np.nan, 1.0, 3.0, 2.0, np.nan, 0.5]),
         np.array([1e39, -2e39, 3.0, 1e39 / 2, 0.0]),
+        np.array([3e-60, 1e-60, 2e-60, -1e-50, 5e-39]),
+        np.array([1e-40, -1e-40, 0.0, 2e-44, 3e-44]),
     ):
         part = Partition({"x": Column(data=raw)})
         ref, _ = B.partial_sort(part, "x", True, None)
