@@ -179,7 +179,16 @@ def main() -> None:
     ap.add_argument("--repeats", type=int, default=5)
     ap.add_argument("--skip-interpret", action="store_true")
     ap.add_argument("--out", default="BENCH_backends.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-rows CI wiring check (no JSON written)")
     args = ap.parse_args()
+    if args.smoke:
+        report = run(20_000, 4_096, warmup=1, repeats=1)
+        assert report["workloads"], "no workloads ran"
+        assert report["calibration_s_per_row"], "calibration produced no fits"
+        print("SMOKE OK:", len(report["workloads"]), "workloads,",
+              len(report["calibration_s_per_row"]), "fitted costs")
+        return
     report = run(args.nrows, args.interpret_nrows, args.warmup, args.repeats,
                  skip_interpret=args.skip_interpret)
     with open(args.out, "w") as f:

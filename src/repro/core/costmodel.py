@@ -12,6 +12,8 @@ agnostic, it just learns from whatever ``observe`` feeds it.
 """
 from __future__ import annotations
 
+import json
+import os
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
 
@@ -76,6 +78,17 @@ class CostModel:
 
     ewma_alpha: float = 0.3
     active_backend: Optional[str] = None
+    # real-mode auto-recalibration: refit after every N new measured samples
+    # (0 = only explicit calibrate() calls)
+    auto_calibrate_every: int = 0
+    # sliding per-key sample window: bounds calibrate() work and memory in
+    # long-lived sessions, and makes the fit track throughput drift
+    max_samples_per_key: int = 1024
+    # monotone estimate version: bumped whenever anything that can change
+    # cost()/unit_cost() output changes (EWMA observation, recalibration,
+    # persisted-cost load) — consumers memoising cost-derived values key
+    # their invalidation on it (see Scheduler._sync_caches)
+    version: int = 0
     _stats: Dict[str, _OpStats] = field(default_factory=dict)
     # raw measured samples: (op, backend) -> [(rows, seconds), ...]
     _samples: Dict[Tuple[str, str], List[Tuple[float, float]]] = field(
@@ -83,6 +96,7 @@ class CostModel:
     )
     # fitted per-backend unit costs (seconds/row), set by calibrate()
     _backend_unit_cost: Dict[Tuple[str, str], float] = field(default_factory=dict)
+    _samples_since_calibrate: int = 0
 
     # -- estimation ------------------------------------------------------------
     def unit_cost(self, op: str, backend: Optional[str] = None) -> float:
@@ -151,13 +165,28 @@ class CostModel:
         else:
             st.unit_cost = (1 - self.ewma_alpha) * st.unit_cost + self.ewma_alpha * per_row
             st.n_obs += 1
+        self.version += 1
 
     # -- per-backend calibration (measured wall-time samples) -------------------
     def add_sample(self, op: str, backend: str, rows: float, seconds: float) -> None:
-        """Record one measured unit execution for later calibration."""
-        self._samples.setdefault((op, backend), []).append(
-            (max(float(rows), 1.0), max(float(seconds), 0.0))
-        )
+        """Record one measured unit execution for later calibration.
+
+        With :attr:`auto_calibrate_every` set (real mode), the fit refreshes
+        itself every N samples, so long sessions track throughput drift
+        (thermal throttling, contended machines) without an explicit
+        :meth:`calibrate` call.  Per-key history is a sliding window
+        (:attr:`max_samples_per_key`), so the refit stays O(keys × window)
+        and memory stays bounded over arbitrarily long sessions."""
+        bucket = self._samples.setdefault((op, backend), [])
+        bucket.append((max(float(rows), 1.0), max(float(seconds), 0.0)))
+        if len(bucket) > self.max_samples_per_key:
+            del bucket[: len(bucket) - self.max_samples_per_key]
+        self._samples_since_calibrate += 1
+        if (
+            self.auto_calibrate_every > 0
+            and self._samples_since_calibrate >= self.auto_calibrate_every
+        ):
+            self.calibrate()
 
     def calibrate(self) -> Dict[Tuple[str, str], float]:
         """Fit per-(op, backend) unit costs from the recorded samples.
@@ -173,7 +202,57 @@ class CostModel:
                 continue
             srs = sum(r * s for r, s in samples)
             self._backend_unit_cost[key] = max(srs / sr2, 1e-12)
+        self._samples_since_calibrate = 0
+        self.version += 1
         return dict(self._backend_unit_cost)
 
     def samples(self) -> Dict[Tuple[str, str], List[Tuple[float, float]]]:
         return {k: list(v) for k, v in self._samples.items()}
+
+    # -- persistence (fitted costs survive across sessions) ----------------------
+    def save(self, path: str) -> None:
+        """Dump the fitted per-(op, backend) unit costs (plus the per-op EWMA
+        state) as JSON, so a fresh session starts from calibrated estimates
+        instead of the static defaults."""
+        payload = {
+            "version": 1,
+            "unit_costs": {
+                f"{op}|{bk}": cost
+                for (op, bk), cost in sorted(self._backend_unit_cost.items())
+            },
+            "op_ewma": {
+                op: {"unit_cost": st.unit_cost, "n_obs": st.n_obs}
+                for op, st in sorted(self._stats.items())
+            },
+        }
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+
+    def load(self, path: str) -> bool:
+        """Install previously fitted costs; returns False if the file is
+        missing, unreadable, or malformed (the model keeps its defaults —
+        a corrupted persisted file must never prevent a session starting).
+        Installation is all-or-nothing: the payload is validated into
+        staging dicts before anything is applied."""
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+            unit_costs = {}
+            for key, cost in payload.get("unit_costs", {}).items():
+                op, _, bk = key.partition("|")
+                if op and bk:
+                    unit_costs[(op, bk)] = float(cost)
+            op_ewma = {
+                op: _OpStats(
+                    unit_cost=float(st["unit_cost"]), n_obs=int(st.get("n_obs", 1))
+                )
+                for op, st in payload.get("op_ewma", {}).items()
+            }
+        except (OSError, ValueError, TypeError, AttributeError, KeyError):
+            return False
+        self._backend_unit_cost.update(unit_costs)
+        self._stats.update(op_ewma)
+        self.version += 1
+        return True

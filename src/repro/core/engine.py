@@ -85,9 +85,20 @@ class Engine:
         predictor: Optional[InteractionPredictor] = None,
         seed: int = 0,
         kernel_backend: Optional[str] = None,  # frame-layer columnar backend
+        batching: bool = True,  # fused multi-partition background dispatches
+        batch_loss_frac: float = 0.1,  # batch duration ≤ this × predicted think
+        cost_model_path: Optional[str] = None,  # persist fitted unit costs
+        recalibrate_every: int = 64,  # real mode: refit costs every N samples
     ):
         self.dag = DAG()
         self.cost_model = CostModel()
+        self.batching = batching
+        self.batch_loss_frac = batch_loss_frac
+        self.cost_model_path = cost_model_path
+        if cost_model_path:
+            self.cost_model.load(cost_model_path)
+        if mode == "real":
+            self.cost_model.auto_calibrate_every = recalibrate_every
         self.clock: Clock = VirtualClock() if mode == "sim" else RealClock()
         self.mode = mode
         self.kernel_backend = kernel_backend
@@ -355,6 +366,18 @@ class Engine:
         return part
 
     # --------------------------------------------------------------- think time --
+    def _batch_budget_s(self, remaining: Optional[float] = None) -> Optional[float]:
+        """Max duration one fused background batch may span, sized so an
+        arriving interaction loses (or waits on) at most one batch: a fraction
+        of the think-time model's current prediction, clamped to the remaining
+        window when one is known.  ``None`` disables batching entirely."""
+        if not self.batching:
+            return None
+        t = self.batch_loss_frac * self.think_time.predict()
+        if remaining is not None:
+            t = min(t, remaining)
+        return max(t, 1e-6)
+
     def think(self, seconds: float) -> dict:
         """Simulation: user thinks for ``seconds`` of virtual time while the
         scheduler opportunistically executes non-critical operators."""
@@ -378,7 +401,8 @@ class Engine:
                 )
                 try:
                     value = self.executor.execute(
-                        node, inputs, self.partials, budget_s=remaining
+                        node, inputs, self.partials, budget_s=remaining,
+                        batch_budget_s=self._batch_budget_s(remaining),
                     )
                     self.cache.put(node, value)
                     self._record_rows(node, value)
@@ -404,7 +428,10 @@ class Engine:
                     if impl.needs_inputs
                     else []
                 )
-                value = self.executor.execute(node, inputs, self.partials)
+                value = self.executor.execute(
+                    node, inputs, self.partials,
+                    batch_budget_s=self._batch_budget_s(),
+                )
                 self.cache.put(node, value)
                 self._record_rows(node, value)
                 n += 1
@@ -420,6 +447,13 @@ class Engine:
         if self._worker is not None:
             self._worker.stop()
             self._worker = None
+        self.save_cost_model()
+
+    def save_cost_model(self) -> None:
+        """Persist fitted unit costs (no-op without ``cost_model_path``)."""
+        if self.cost_model_path:
+            self.cost_model.calibrate()
+            self.cost_model.save(self.cost_model_path)
 
     def _pause_worker(self) -> None:
         if self._worker is not None:
@@ -501,6 +535,7 @@ class _BackgroundWorker:
                     inputs,
                     eng.partials,
                     preempt_check=self._pause_req.is_set,
+                    batch_budget_s=eng._batch_budget_s(),
                 )
                 with eng._lock:
                     eng.cache.put(node, value)

@@ -9,6 +9,17 @@ map — the head/tail partial-result path fills units from the front/back) and
 execution resumes from the first missing unit during the next think-time
 window — preemption never wastes completed-partition work.
 
+Batched execution: running one kernel dispatch per partition leaves the device
+idle between host round-trips (the dispatch-bound regime).  Operators that
+support it expose :class:`UnitBatch` construction via ``OpRuntime.make_batches``
+— k partition units fused into one dispatch, with preemption granularity
+widened from one unit to one batch.  The batch size is chosen from a time
+budget (``batch_budget_s``) so an arriving interaction loses at most one
+batch; a completed batch fills all k of its :class:`PartialProgress` slots at
+once.  In real mode batches are *pipelined*: the next batch's kernel is
+dispatched before the previous batch's results are pulled back to host (JAX
+async dispatch), so device compute overlaps host-side finalisation.
+
 Operator semantics are supplied by an :class:`OpRuntime` registry (the frame
 layer registers dataframe operators; the serving layer registers decode /
 prefill steps).
@@ -31,6 +42,27 @@ class Unit:
     fn: Callable[[], Any]
     cost_s: float = 0.0  # simulated duration; real mode measures instead
     tag: str = ""
+
+
+@dataclass
+class UnitBatch:
+    """k fused units: one device dispatch covering ``indices`` unit slots.
+
+    ``dispatch()`` launches the kernel and returns a handle without waiting
+    for the result (JAX async dispatch keeps the arrays device-side);
+    ``finalize(handle)`` blocks, pulls results to host, and returns one value
+    per index in ``indices`` order.  A singleton batch wrapping a host-path
+    unit simply runs it inside ``dispatch`` and passes the value through.
+    """
+
+    indices: List[int]
+    dispatch: Callable[[], Any]
+    finalize: Callable[[Any], List[Any]]
+    cost_s: float = 0.0  # simulated duration of the whole batch
+    tag: str = ""
+
+    def __len__(self) -> int:
+        return len(self.indices)
 
 
 @dataclass
@@ -63,6 +95,14 @@ class OpRuntime:
     # optional interaction fast path (physical rewrites like the paper's
     # Fig. 2b group-head pushdown); returns None to fall through
     fast_interaction: Optional[Callable[["Node"], Optional[Any]]] = None
+    # optional batched execution: make_batches(node, inputs, units, indices,
+    # max_batch) -> List[UnitBatch] covering every index in ``indices`` (ops
+    # may wrap unsupported partitions as singleton host batches), or None to
+    # decline batching for this node and run unit-at-a-time
+    make_batches: Optional[
+        Callable[["Node", Sequence[Any], List[Unit], List[int], int],
+                 Optional[List["UnitBatch"]]]
+    ] = None
 
 
 @dataclass
@@ -112,6 +152,8 @@ class ExecStats:
     units_preempted_lost: int = 0
     nodes_completed: int = 0
     seconds: float = 0.0
+    batches_run: int = 0  # fused dispatches (a batch of k counts k units_run)
+    units_batched: int = 0  # units that rode a multi-unit batch
 
 
 class Executor:
@@ -135,12 +177,18 @@ class Executor:
         partials: Dict[int, PartialProgress],
         preempt_check: Optional[Callable[[], bool]] = None,
         budget_s: Optional[float] = None,
+        batch_budget_s: Optional[float] = None,
     ) -> Any:
         """Execute ``node``; raises :class:`Preempted` if interrupted.
 
         ``budget_s`` (virtual clocks only): stop when the simulated duration of
         the *next* unit would exceed the remaining budget — models an
         interaction arriving during that unit, whose progress would be lost.
+
+        ``batch_budget_s``: enable batched execution when the operator supports
+        it — fuse up to k units per dispatch, sized so one batch's estimated
+        duration stays within the budget (an arriving interaction loses at
+        most one batch).  ``None`` disables batching (unit-at-a-time).
         """
         impl = self.registry[node.op]
         units = impl.units(node, inputs)
@@ -151,9 +199,20 @@ class Executor:
 
         started = self.clock.now()
         spent = 0.0
-        for i in range(len(units)):
-            if i in prog.results:
-                continue
+        missing = [i for i in range(len(units)) if i not in prog.results]
+        if batch_budget_s is not None and impl.make_batches is not None and missing:
+            k = self._batch_size(units, missing, batch_budget_s)
+            batches = (
+                impl.make_batches(node, inputs, units, missing, k)
+                if k > 1
+                else None
+            )
+            if batches:
+                spent += self._run_batches(
+                    node, batches, prog, preempt_check, budget_s, spent
+                )
+                missing = [i for i in missing if i not in prog.results]
+        for i in missing:
             unit = units[i]
             if preempt_check is not None and preempt_check():
                 raise Preempted(node.label)
@@ -183,3 +242,97 @@ class Executor:
         self.stats.nodes_completed += 1
         partials.pop(node.nid, None)
         return value
+
+    # hard batch-size ceiling: cost estimates can be stale by orders of
+    # magnitude before calibration, and one mis-sized mega-batch both blows
+    # the preemption-loss bound and starves the async pipeline of overlap
+    MAX_BATCH_UNITS = 32
+
+    @staticmethod
+    def _batch_size(
+        units: List[Unit], missing: List[int], batch_budget_s: float
+    ) -> int:
+        """Units per batch such that one batch's estimated duration fits the
+        budget: k = budget / mean-unit-cost, clamped to
+        [1, min(len(missing), MAX_BATCH_UNITS)] and rounded DOWN to a power
+        of two — fused kernels jit-specialise on the stacked batch shape, so
+        quantising k keeps the compiled-executable universe tiny (≤ 6 sizes)
+        instead of recompiling whenever calibration drifts the estimate."""
+        cap = min(len(missing), Executor.MAX_BATCH_UNITS)
+        est = sum(units[i].cost_s for i in missing) / max(len(missing), 1)
+        k = cap if est <= 0 else max(1, min(cap, int(batch_budget_s / est)))
+        return 1 << (k.bit_length() - 1)
+
+    def _run_batches(
+        self,
+        node,
+        batches: List[UnitBatch],
+        prog: PartialProgress,
+        preempt_check: Optional[Callable[[], bool]],
+        budget_s: Optional[float],
+        spent0: float,
+    ) -> float:
+        """Run fused batches; fills ``prog`` k slots per completed batch.
+
+        Virtual clock: synchronous, budget checked at batch granularity — a
+        batch that would straddle the interaction arrival is lost whole (the
+        batched analogue of the paper's one-partition worst case).
+
+        Real clock: pipelined — batch i+1 is dispatched before batch i's
+        results are finalised, so the device never waits on the host between
+        batches.  Preemption is polled between dispatches; an in-flight batch
+        is *harvested* (its kernel already runs on the device — blocking for
+        its result wastes nothing and its slots never recompute) before the
+        Preempted signal propagates.
+        """
+        spent = 0.0
+
+        def fill(batch: UnitBatch, results: List[Any]) -> None:
+            for idx, res in zip(batch.indices, results):
+                prog.results[idx] = res
+            self.stats.units_run += len(batch)
+            self.stats.batches_run += 1
+            if len(batch) > 1:
+                self.stats.units_batched += len(batch)
+
+        if self.clock.virtual:
+            for batch in batches:
+                if any(i in prog.results for i in batch.indices):
+                    continue  # defensive: slots already filled elsewhere
+                if preempt_check is not None and preempt_check():
+                    raise Preempted(node.label)
+                if budget_s is not None and spent0 + spent + batch.cost_s > (
+                    budget_s + 1e-12
+                ):
+                    # the whole batch straddles the arrival: one batch lost
+                    self.stats.units_preempted_lost += len(batch)
+                    raise Preempted(node.label)
+                fill(batch, batch.finalize(batch.dispatch()))
+                self.clock.advance(batch.cost_s)
+                spent += batch.cost_s
+            return spent
+
+        # wall time of the whole pipelined loop — NOT the sum of per-batch
+        # dispatch→finalize spans, which overlap under pipelining and would
+        # double-count device compute (inflating observe() ~2x)
+        t_loop = time.monotonic()
+        inflight: Optional[tuple] = None  # (batch, handle)
+        try:
+            for batch in batches:
+                if preempt_check is not None and preempt_check():
+                    raise Preempted(node.label)
+                handle = batch.dispatch()
+                if inflight is not None:
+                    pb, ph = inflight
+                    fill(pb, pb.finalize(ph))
+                inflight = (batch, handle)
+            if inflight is not None:
+                pb, ph = inflight
+                fill(pb, pb.finalize(ph))
+                inflight = None
+            return time.monotonic() - t_loop
+        except Preempted:
+            if inflight is not None:  # harvest the dispatched batch
+                pb, ph = inflight
+                fill(pb, pb.finalize(ph))
+            raise

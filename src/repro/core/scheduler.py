@@ -47,26 +47,76 @@ class Scheduler:
         # hot-path memoisation: the think loop calls pick() once per executed
         # node, and each pick() walks descendants of every source and the
         # ancestor cone of every descendant.  Descendant sets depend only on
-        # DAG structure (invalidated via dag.version); delivery costs depend on
-        # structure + the executed set (invalidated when either changes).
+        # DAG structure (invalidated via dag.version); delivery costs and the
+        # Eq-1 utility sums depend on structure + the executed set, and are
+        # *delta-maintained*: when the executed set changes by a node x (one
+        # completes, or an eviction removes one), only entries whose ancestor
+        # cone contains x — i.e. the descendant cone of x — are dropped.
+        # Everything outside that cone keeps its exact memoised float, so a
+        # full recompute and the delta path produce byte-identical plans.
         self._dag_version: int = -1
+        self._cost_version: int = -1
         self._desc_cache: dict[int, list[Node]] = {}
+        self._desc_ids: dict[int, frozenset] = {}
         self._delivery_memo: dict[int, float] = {}
+        self._utility_memo: dict[int, float] = {}  # Eq-1 base sums per source
+        self._demand_memo: dict[int, bool] = {}  # evicted source -> has demand
         self._memo_done: Optional[frozenset] = None
+        self._node_by_id: dict[int, Node] = {}
 
     # -- memoised graph walks ---------------------------------------------------
+    def _drop_all_done_memos(self) -> None:
+        self._delivery_memo.clear()
+        self._utility_memo.clear()
+        self._demand_memo.clear()
+
     def _sync_caches(self, done: frozenset) -> None:
         v = self.dag.version
         if v != self._dag_version:
             self._dag_version = v
             self._desc_cache.clear()
-            self._delivery_memo.clear()
+            self._desc_ids.clear()
+            self._drop_all_done_memos()
             self._memo_done = None
-        if done != self._memo_done:
-            # executed set changed (node finished or was evicted): delivery
-            # costs are stale, pure-structure descendant sets are not
-            self._memo_done = done
+            self._node_by_id = {n.nid: n for n in self.dag.nodes}
+        cv = getattr(self.cost_model, "version", 0)
+        if cv != self._cost_version:
+            # cost estimates drifted (EWMA observation / recalibration /
+            # persisted-cost load): every memoised delivery cost and utility
+            # sum is stale.  Demand verdicts are cost-free and survive.  The
+            # delta path below still carries plan()'s greedy loop and eviction
+            # churn, where costs don't move between picks.
+            self._cost_version = cv
             self._delivery_memo.clear()
+            self._utility_memo.clear()
+        if done != self._memo_done:
+            prev = self._memo_done
+            if prev is None:
+                self._drop_all_done_memos()
+            else:
+                self._invalidate_cones(done ^ prev)
+            self._memo_done = done
+
+    def _invalidate_cones(self, changed: Iterable[int]) -> None:
+        """Delta maintenance: completing or evicting node x only changes the
+        delivery cost of nodes whose ancestor cone contains x — exactly the
+        descendant cone of x — and the utility/demand of sources whose
+        descendant set meets that cone."""
+        affected: set = set()
+        for nid in changed:
+            node = self._node_by_id.get(nid)
+            if node is None:  # executed id unknown to this DAG: full reset
+                self._drop_all_done_memos()
+                return
+            affected |= self._desc_id_set(node)
+        for nid in affected:
+            self._delivery_memo.pop(nid, None)
+        for memo in (self._utility_memo, self._demand_memo):
+            stale = [
+                s for s in memo if not affected.isdisjoint(self._desc_id_set_of(s))
+            ]
+            for s in stale:
+                memo.pop(s, None)
 
     def _descendants(self, node: Node) -> list[Node]:
         d = self._desc_cache.get(node.nid)
@@ -74,6 +124,19 @@ class Scheduler:
             d = self.dag.descendants(node, include_self=True)
             self._desc_cache[node.nid] = d
         return d
+
+    def _desc_id_set(self, node: Node) -> frozenset:
+        s = self._desc_ids.get(node.nid)
+        if s is None:
+            s = frozenset(d.nid for d in self._descendants(node))
+            self._desc_ids[node.nid] = s
+        return s
+
+    def _desc_id_set_of(self, nid: int) -> frozenset:
+        node = self._node_by_id.get(nid)
+        if node is None:
+            return frozenset((nid,))
+        return self._desc_id_set(node)
 
     def _delivery_cost(self, j: Node, done: frozenset) -> float:
         c = self._delivery_memo.get(j.nid)
@@ -88,12 +151,19 @@ class Scheduler:
         done = executed if isinstance(executed, frozenset) else frozenset(executed)
         self._sync_caches(done)
         use_p = self.policy == "utility_p" and self.predictor is not None
-        total = 0.0
-        for j in self._descendants(source):
-            c_j = self._delivery_cost(j, done)
-            if use_p:
-                c_j *= self.predictor.p_interaction(j)
-            total += c_j
+        if use_p:
+            # the predictor's p_j drifts with observed transitions, so Eq-4
+            # products are recomputed per call (from memoised delivery costs)
+            total = 0.0
+            for j in self._descendants(source):
+                total += self._delivery_cost(j, done) * self.predictor.p_interaction(j)
+        else:
+            total = self._utility_memo.get(source.nid)
+            if total is None:
+                total = 0.0
+                for j in self._descendants(source):
+                    total += self._delivery_cost(j, done)
+                self._utility_memo[source.nid] = total
         if self.extra_utility is not None:
             total += self.extra_utility(source)
         return total
@@ -104,10 +174,21 @@ class Scheduler:
         self._sync_caches(done)
         out = []
         for n in source_operators(self.dag, done):
-            if n.nid in self.evicted_once and all(
-                d.nid in done for d in self._descendants(n) if d.nid != n.nid
-            ):
-                continue  # no demand: don't churn on a GC'd result
+            if n.nid in self.evicted_once:
+                # anti-thrash: a GC'd result is only recomputed on demand (an
+                # unexecuted descendant).  The verdict is memoised alongside
+                # the delivery memo — delta-invalidated by the same cone rule —
+                # instead of rescanning the full descendant list every call.
+                demand = self._demand_memo.get(n.nid)
+                if demand is None:
+                    demand = any(
+                        d.nid not in done
+                        for d in self._descendants(n)
+                        if d.nid != n.nid
+                    )
+                    self._demand_memo[n.nid] = demand
+                if not demand:
+                    continue  # no demand: don't churn on a GC'd result
             out.append(n)
         return out
 
@@ -137,3 +218,33 @@ class Scheduler:
                 return order
             order.append(nxt)
             done.add(nxt.nid)
+
+    # -- self-check oracle ---------------------------------------------------------
+    def reference_pick(self, executed: Iterable[int]) -> Optional[Node]:
+        """Brute-force, memo-free re-derivation of ``pick()`` under the
+        "utility" policy: walks the DAG and the cost model directly on every
+        call.  This is the oracle the delta-maintained memos are verified
+        against (the scheduler fuzz tests and ``bench_background``'s
+        ``plan_order_unchanged`` invariant) — keep it dumb."""
+        done = frozenset(executed)
+        srcs = []
+        for n in source_operators(self.dag, done):
+            if n.nid in self.evicted_once and all(
+                d.nid in done
+                for d in self.dag.descendants(n, include_self=True)
+                if d.nid != n.nid
+            ):
+                continue
+            srcs.append(n)
+        if not srcs:
+            return None
+
+        def util(s: Node) -> float:
+            total = 0.0
+            for j in self.dag.descendants(s, include_self=True):
+                total += self.cost_model.delivery_cost(j, done)
+            if self.extra_utility is not None:
+                total += self.extra_utility(s)
+            return total
+
+        return max(srcs, key=lambda n: (util(n), -n.nid))

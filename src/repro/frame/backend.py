@@ -147,22 +147,33 @@ def _dev_valid(col: Column):
     return dev
 
 
+def warm_device_cache(table) -> None:
+    """Upload every partition's columns into the device-resident cache
+    (production preloading: subsequent think-time partials skip all
+    host→device transfers and are purely dispatch/compute bound).  Also
+    pre-builds the stacked describe matrices (`_dev_stats_stack`), the other
+    per-partition device artefact the steady state relies on."""
+    for part in table.partitions:
+        for name in part.order:
+            c = part.columns[name]
+            if c.is_string or c.data.dtype.kind in "iu":
+                _dev_i32(c)
+            if not c.is_string:
+                _dev_f32(c)
+            _dev_valid(c)
+        numeric = B.numeric_columns(part)
+        if numeric and part.nrows:
+            _dev_stats_stack(part, numeric)
+
+
 # --------------------------------------------------------------------------- #
 # describe / mean — masked_stats                                               #
 # --------------------------------------------------------------------------- #
 
 
-def partial_stats(
-    part: Partition,
-    cols: Optional[Sequence[str]] = None,
-    backend: Optional[str] = None,
-) -> Dict[str, ColStats]:
-    bk = active_backend(backend)
-    names = list(cols) if cols is not None else B.numeric_columns(part)
-    if bk == "numpy" or not names or part.nrows == 0:
-        return B.partial_stats(part, cols)
-    # the stacked + shape-bucketed (C, nb) matrix is cached per partition so
-    # steady-state describe partials are a single kernel dispatch
+def _dev_stats_stack(part: Partition, names: Sequence[str]):
+    """The stacked + shape-bucketed (C, nb) value/validity matrices, cached
+    per partition so steady-state describe partials skip all host work."""
     key = tuple(names)
     cached = part.__dict__.get("_dev_stats")
     if cached is None or cached[0] != key:
@@ -175,9 +186,13 @@ def partial_stats(
             ms = jnp.pad(ms, ((0, 0), (0, pad)), constant_values=False)
         cached = (key, xs, ms)
         part.__dict__["_dev_stats"] = cached
-    _, xs, ms = cached
-    with _kernel(bk):
-        raw = np.asarray(ops.masked_stats_batch(xs, ms), np.float64)
+    return cached[1], cached[2]
+
+
+def _stats_from_raw(names: Sequence[str], raw: np.ndarray) -> Dict[str, ColStats]:
+    """(C, 5) kernel rows of (count, sum, sumsq, min, max) → per-column
+    ColStats — the shared host postprocessing of the batched and unbatched
+    paths (bit-for-bit by construction)."""
     out: Dict[str, ColStats] = {}
     for i, name in enumerate(names):
         count, s, ss, mn, mx = raw[i]
@@ -188,6 +203,21 @@ def partial_stats(
             m2 = max(ss - s * s / count, 0.0)
             out[name] = ColStats(float(count), float(mean), float(m2), float(mn), float(mx))
     return out
+
+
+def partial_stats(
+    part: Partition,
+    cols: Optional[Sequence[str]] = None,
+    backend: Optional[str] = None,
+) -> Dict[str, ColStats]:
+    bk = active_backend(backend)
+    names = list(cols) if cols is not None else B.numeric_columns(part)
+    if bk == "numpy" or not names or part.nrows == 0:
+        return B.partial_stats(part, cols)
+    xs, ms = _dev_stats_stack(part, names)
+    with _kernel(bk):
+        raw = np.asarray(ops.masked_stats_batch(xs, ms), np.float64)
+    return _stats_from_raw(names, raw)
 
 
 # --------------------------------------------------------------------------- #
@@ -211,25 +241,16 @@ def _groupby_supported(part: Partition, by: str, aggs, topk_keys) -> bool:
     return True
 
 
-def partial_groupby(
-    part: Partition,
-    by: str,
-    aggs: Sequence[Tuple[str, str, Any]],
-    topk_keys: Optional[int] = None,
-    backend: Optional[str] = None,
-) -> dict:
-    bk = active_backend(backend)
-    if bk == "numpy" or not _groupby_supported(part, by, aggs, topk_keys):
-        return B.partial_groupby(part, by, aggs, topk_keys)
+def _groupby_plan(part: Partition, by: str, aggs) -> tuple:
+    """Assemble ONE batched kernel call for the whole agg set.  Validity rows
+    are deduplicated by the agg column's mask identity — unmasked columns
+    (and key presence) share a single count row instead of paying per-agg
+    count passes.  Returns (keys, values, valids, modes, valid_idx, agg_plan);
+    the plan *structure* (modes, valid_idx, per-agg rows) depends only on
+    which agg columns carry masks, so same-layout partitions can share one
+    fused multi-partition dispatch."""
     key_col = part.columns[by]
-    nb = len(key_col.dictionary)
-    keys = _dev_i32(key_col)
     kvalid = _dev_valid(key_col)
-
-    # Assemble ONE batched kernel call for the whole agg set.  Validity rows
-    # are deduplicated by the agg column's mask identity — unmasked columns
-    # (and key presence) share a single count row instead of paying per-agg
-    # count passes.
     values: list = []
     modes: list = []
     valid_idx: list = []
@@ -254,10 +275,14 @@ def partial_groupby(
         modes.append(_SEG_MODE[fn])
         valid_idx.append(vrow)
         agg_plan.append((out_name, fn, len(values) - 1, vrow))
-    with _kernel(bk):
-        reds, cnts = ops.segment_reduce_batch(
-            keys, values, valids, nb, modes, valid_idx
-        )
+    return _dev_i32(key_col), values, valids, modes, valid_idx, agg_plan
+
+
+def _groupby_from_raw(
+    key_dtype, agg_plan, reds: np.ndarray, cnts: np.ndarray
+) -> dict:
+    """Kernel rows → the dense partial-groupby dict (shared by the batched and
+    unbatched paths — bit-for-bit by construction)."""
     reds = np.asarray(reds, np.float64)
     cnts = np.asarray(cnts, np.float64)
     present = cnts[0] > 0
@@ -271,8 +296,35 @@ def partial_groupby(
             dense[out_name] = ("sum_count", (reds[srow][present], cnts[vrow][present]))
         else:  # min / max: empty (all-null) groups keep the ±inf neutral
             dense[out_name] = (fn, reds[srow][present])
-    uniq = np.nonzero(present)[0].astype(key_col.data.dtype)
+    uniq = np.nonzero(present)[0].astype(key_dtype)
     return {"keys": uniq, "aggs": dense}
+
+
+def partial_groupby(
+    part: Partition,
+    by: str,
+    aggs: Sequence[Tuple[str, str, Any]],
+    topk_keys: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> dict:
+    bk = active_backend(backend)
+    if bk == "numpy" or not _groupby_supported(part, by, aggs, topk_keys):
+        return B.partial_groupby(part, by, aggs, topk_keys)
+    key_col = part.columns[by]
+    nb = len(key_col.dictionary)
+    keys, values, valids, modes, valid_idx, agg_plan = _groupby_plan(part, by, aggs)
+    with _kernel(bk):
+        reds, cnts = ops.segment_reduce_batch(
+            keys, values, valids, nb, modes, valid_idx
+        )
+    return _groupby_from_raw(key_col.data.dtype, agg_plan, reds, cnts)
+
+
+def _vc_from_raw(key_dtype, cnt_row: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    cnt = np.asarray(cnt_row)
+    present = cnt > 0
+    values = np.nonzero(present)[0].astype(key_dtype)
+    return values, cnt[present].astype(np.int64)
 
 
 def partial_value_counts(
@@ -286,10 +338,7 @@ def partial_value_counts(
         _, cnts = ops.segment_reduce_batch(
             _dev_i32(c), [], [_dev_valid(c)], len(c.dictionary), [], []
         )
-    cnt = np.asarray(cnts)[0]
-    present = cnt > 0
-    values = np.nonzero(present)[0].astype(c.data.dtype)
-    return values, cnt[present].astype(np.int64)
+    return _vc_from_raw(c.data.dtype, np.asarray(cnts)[0])
 
 
 # --------------------------------------------------------------------------- #
@@ -400,8 +449,22 @@ def _partial_sort_limit(
     kf32 = keys.astype(np.float32)
     with _kernel(bk):
         winners = np.asarray(ops.topk_padded(kf32, limit, largest=not ascending))
-    # threshold in f32 space: rounding is monotone, so rows whose f32 key beats
-    # the f32 k-th winner are a superset of the true top-k (ties included)
+    return _limit_select(part, keys, kf32, winners, ascending, limit, n_samples)
+
+
+def _limit_select(
+    part: Partition,
+    keys: np.ndarray,
+    kf32: np.ndarray,
+    winners: np.ndarray,
+    ascending: bool,
+    limit: int,
+    n_samples: int,
+) -> Tuple[Partition, np.ndarray]:
+    """Winner values → final limit-sort result — the shared host step of the
+    batched and unbatched limit paths.  Threshold in f32 space: rounding is
+    monotone, so rows whose f32 key beats the f32 k-th winner are a superset
+    of the true top-k (ties included)."""
     kth = winners[-1]
     cand = np.nonzero(kf32 <= kth if ascending else kf32 >= kth)[0]
     order_local = np.argsort(keys[cand] if ascending else -keys[cand], kind="stable")
@@ -567,6 +630,270 @@ def _compact_lossless(c: Column) -> bool:
     if c.dictionary is not None and len(c.dictionary) < (1 << 24):
         return True
     return False
+
+
+# --------------------------------------------------------------------------- #
+# fused multi-partition batch plans                                            #
+#                                                                              #
+# Each planner inspects a group of partitions (same shape bucket — the caller  #
+# groups by `ops.pad_len`) and returns a two-phase ``(dispatch, finalize)``    #
+# pair for the executor's UnitBatch, or ``None`` when any partition falls      #
+# outside the kernel envelope (the caller then runs those units one at a       #
+# time through the ordinary per-partition paths).  ``dispatch()`` launches     #
+# ONE fused kernel for the whole group and returns without blocking (JAX       #
+# async dispatch); ``finalize(handle)`` blocks, pulls results to host, and     #
+# reuses the *same* postprocessing helpers as the unbatched paths — batched    #
+# results are bit-for-bit identical by construction.                           #
+# --------------------------------------------------------------------------- #
+
+BatchPlan = Tuple[Any, Any]  # (dispatch: () -> handle, finalize: handle -> list)
+
+
+def shape_bucket(part: Partition) -> int:
+    """The jit shape bucket a partition pads to (runtime groups batches by it)."""
+    return ops.pad_len(part.nrows)
+
+
+def _same_bucket(parts: Sequence[Partition]) -> bool:
+    return len({ops.pad_len(p.nrows) for p in parts}) == 1
+
+
+def plan_stats_batch(
+    parts: Sequence[Partition],
+    cols: Optional[Sequence[str]] = None,
+    backend: Optional[str] = None,
+) -> Optional[BatchPlan]:
+    bk = active_backend(backend)
+    if bk == "numpy" or not parts or not _same_bucket(parts):
+        return None
+    names = list(cols) if cols is not None else B.numeric_columns(parts[0])
+    if not names:
+        return None
+    for p in parts:
+        p_names = list(cols) if cols is not None else B.numeric_columns(p)
+        if p_names != names or p.nrows == 0:
+            return None
+    C = len(names)
+
+    def dispatch():
+        stacks = [_dev_stats_stack(p, names) for p in parts]
+        with _kernel(bk):
+            return ops.masked_stats_batch_parts(
+                [xs for xs, _ in stacks], [ms for _, ms in stacks]
+            )
+
+    def finalize(raw):
+        raw = np.asarray(raw, np.float64)
+        return [
+            _stats_from_raw(names, raw[i * C:(i + 1) * C])
+            for i in range(len(parts))
+        ]
+
+    return dispatch, finalize
+
+
+def plan_groupby_batch(
+    parts: Sequence[Partition],
+    by: str,
+    aggs: Sequence[Tuple[str, str, Any]],
+    topk_keys: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> Optional[BatchPlan]:
+    bk = active_backend(backend)
+    if bk == "numpy" or not parts or not _same_bucket(parts):
+        return None
+    if any(not _groupby_supported(p, by, aggs, topk_keys) for p in parts):
+        return None
+    nb = len(parts[0].columns[by].dictionary)
+    plans = [_groupby_plan(p, by, aggs) for p in parts]
+    _, _, valids0, modes0, vidx0, aplan0 = plans[0]
+    for pl in plans[1:]:
+        # the fused call shares one (modes, valid_idx) trace: partitions whose
+        # mask layout differs (e.g. only some have nulls in an agg column)
+        # get different plan structures and cannot ride the same dispatch
+        if pl[3] != modes0 or pl[4] != vidx0 or len(pl[2]) != len(valids0):
+            return None
+        if [(n, f, s, v) for n, f, s, v in pl[5]] != aplan0:
+            return None
+
+    def dispatch():
+        with _kernel(bk):
+            return ops.segment_reduce_batch_parts(
+                [pl[0] for pl in plans],
+                [pl[1] for pl in plans],
+                [pl[2] for pl in plans],
+                nb, modes0, vidx0,
+            )
+
+    def finalize(handle):
+        reds, cnts = handle
+        reds = np.asarray(reds)
+        cnts = np.asarray(cnts)
+        return [
+            _groupby_from_raw(
+                parts[i].columns[by].data.dtype, plans[i][5], reds[i], cnts[i]
+            )
+            for i in range(len(parts))
+        ]
+
+    return dispatch, finalize
+
+
+def plan_value_counts_batch(
+    parts: Sequence[Partition], col: str, backend: Optional[str] = None
+) -> Optional[BatchPlan]:
+    bk = active_backend(backend)
+    if bk == "numpy" or not parts or not _same_bucket(parts):
+        return None
+    if any(p.columns[col].dictionary is None or p.nrows == 0 for p in parts):
+        return None
+    nb = len(parts[0].columns[col].dictionary)
+
+    def dispatch():
+        with _kernel(bk):
+            return ops.segment_reduce_batch_parts(
+                [_dev_i32(p.columns[col]) for p in parts],
+                [[] for _ in parts],
+                [[_dev_valid(p.columns[col])] for p in parts],
+                nb, [], [],
+            )
+
+    def finalize(handle):
+        _, cnts = handle
+        cnts = np.asarray(cnts)
+        return [
+            _vc_from_raw(parts[i].columns[col].data.dtype, cnts[i][0])
+            for i in range(len(parts))
+        ]
+
+    return dispatch, finalize
+
+
+def plan_sort_batch(
+    parts: Sequence[Partition],
+    by: str,
+    ascending: bool,
+    limit: Optional[int],
+    n_samples: int = 32,
+    backend: Optional[str] = None,
+) -> Optional[BatchPlan]:
+    bk = active_backend(backend)
+    if bk == "numpy" or not parts or not _same_bucket(parts):
+        return None
+    if any(p.columns.get(by) is None or p.nrows == 0 for p in parts):
+        return None
+    if limit is None:
+        keys_list = [_sort_keys(p.columns[by], ascending) for p in parts]
+        if not all(_sort_keys_exact(k) for k in keys_list):
+            return None
+
+        def dispatch():
+            with _kernel(bk):
+                return ops.argsort_f64_parts(
+                    [k if ascending else -k for k in keys_list]
+                )
+
+        def finalize(handle):
+            orders = np.asarray(handle)
+            return [
+                _sorted_result(
+                    parts[i], keys_list[i], orders[i][: parts[i].nrows], n_samples
+                )
+                for i in range(len(parts))
+            ]
+
+        return dispatch, finalize
+
+    if not (1 <= limit <= TOPK_MAX_K):
+        return None
+    if any(
+        p.columns[by].is_string or p.nrows <= limit for p in parts
+    ):
+        return None
+    keys_list = [_sort_keys(p.columns[by], ascending) for p in parts]
+    if any(np.isnan(k).any() for k in keys_list):
+        return None  # NaN keys poison lax.top_k thresholds (see unbatched path)
+    kf32s = [k.astype(np.float32) for k in keys_list]
+
+    def dispatch():
+        with _kernel(bk):
+            return ops.topk_padded_parts(kf32s, limit, largest=not ascending)
+
+    def finalize(handle):
+        winners = np.asarray(handle)
+        return [
+            _limit_select(
+                parts[i], keys_list[i], kf32s[i], winners[i],
+                ascending, limit, n_samples,
+            )
+            for i in range(len(parts))
+        ]
+
+    return dispatch, finalize
+
+
+def plan_select_rows_batch(
+    parts: Sequence[Partition],
+    keeps_fn,
+    backend: Optional[str] = None,
+) -> Optional[BatchPlan]:
+    """Fused filter compaction over a partition group.  ``keeps_fn()`` is
+    called at *dispatch* time and must return one boolean keep mask per
+    partition — predicate evaluation is part of the unit's work and stays
+    inside the preemption quantum."""
+    bk = active_backend(backend)
+    if bk == "numpy" or not parts or not _same_bucket(parts):
+        return None
+    if any(p.nrows == 0 for p in parts):
+        return None
+
+    def dispatch():
+        keeps = [np.asarray(k, bool) for k in keeps_fn()]
+        xs_rows: list = []
+        keeps_rows: list = []
+        row_of: Dict[Tuple[int, str, str], int] = {}
+        for i, (p, keep) in enumerate(zip(parts, keeps)):
+            keep_dev = jnp.asarray(keep)
+            for name in p.order:
+                c = p.columns[name]
+                if not _compact_lossless(c):
+                    continue
+                row_of[(i, name, "data")] = len(xs_rows)
+                xs_rows.append(_dev_f32(c))
+                keeps_rows.append(keep_dev)
+                if c.mask is not None:
+                    row_of[(i, name, "mask")] = len(xs_rows)
+                    xs_rows.append(jnp.asarray(c.mask).astype(jnp.float32))
+                    keeps_rows.append(keep_dev)
+        out = None
+        if xs_rows:
+            with _kernel(bk):
+                out, _ = ops.filter_compact_padded_parts(xs_rows, keeps_rows)
+        return keeps, row_of, out
+
+    def finalize(handle):
+        keeps, row_of, out = handle
+        out = np.asarray(out) if out is not None else None
+        results = []
+        for i, p in enumerate(parts):
+            keep = keeps[i]
+            count = int(keep.sum())
+            new_cols: Dict[str, Column] = {}
+            for name in p.order:
+                c = p.columns[name]
+                drow = row_of.get((i, name, "data"))
+                if drow is None:
+                    new_cols[name] = c.select(keep)
+                    continue
+                data = out[drow][:count].astype(c.data.dtype)
+                mask = None
+                if c.mask is not None:
+                    mask = out[row_of[(i, name, "mask")]][:count] > 0.5
+                new_cols[name] = Column(data=data, mask=mask, dictionary=c.dictionary)
+            results.append(Partition(new_cols, list(p.order)))
+        return results
+
+    return dispatch, finalize
 
 
 def select_rows(

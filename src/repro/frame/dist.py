@@ -13,6 +13,8 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from ..jaxcompat import shard_map as _shard_map
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -49,7 +51,7 @@ def make_distributed_describe(mesh: Mesh, axis: str = "data"):
         std = jnp.sqrt(var * n / denom)
         return jnp.stack([n, mean, std, mn, mx])
 
-    sharded = jax.shard_map(
+    sharded = _shard_map(
         _local,
         mesh=mesh,
         in_specs=(P(axis), P(axis)),
@@ -73,7 +75,7 @@ def make_distributed_groupby_sum(mesh: Mesh, n_buckets: int, axis: str = "data")
         counts = jax.ops.segment_sum(c, keys, num_segments=n_buckets)
         return jax.lax.psum(sums, axis), jax.lax.psum(counts, axis)
 
-    sharded = jax.shard_map(
+    sharded = _shard_map(
         _local,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis)),

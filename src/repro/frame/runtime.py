@@ -15,7 +15,7 @@ import numpy as np
 from ..core.costmodel import CostModel
 from ..core.dag import Node
 from ..core.engine import Engine
-from ..core.executor import OpRuntime, Unit
+from ..core.executor import OpRuntime, Unit, UnitBatch
 from . import backend as BK
 from . import blocking as B
 from .backend import BackendPolicy
@@ -68,6 +68,94 @@ class FrameRuntime:
         total_rows = max(sum(p.nrows for p in parts), 1)
         c = self._node_cost(node)
         return [c * p.nrows / total_rows for p in parts]
+
+    def _batch_maker(self, planner: Callable[[Node, Sequence[Any], List[Partition], str], Any]):
+        """Build an ``OpRuntime.make_batches`` hook from a per-group planner.
+
+        ``planner(node, inputs, group, bk)`` returns the backend's
+        ``(dispatch, finalize)`` pair for a group of partitions or ``None``
+        when the group falls outside the kernel envelope — those indices are
+        left uncovered and the executor runs them unit-at-a-time.  Missing
+        indices are chunked into runs of ≤ ``max_batch`` partitions sharing
+        one jit shape bucket, so each batch is a single fused dispatch.
+        Calibration moves to the batch block points: one
+        ``(op, backend, rows, seconds)`` sample per batch.  Under the async
+        pipeline the raw dispatch→finalize spans of consecutive batches
+        overlap (batch i+1 launches before batch i's results land), so each
+        sample clips its start to the previous batch's block point — the
+        clipped spans tile wall time exactly and the fitted unit costs
+        reflect achieved *batched throughput*, not double-counted latency.
+        """
+
+        def make_batches(node, inputs, units, indices, max_batch):
+            parent = inputs[0]
+            bk = self.backend_policy.resolve()
+            if bk == "numpy" or max_batch < 2:
+                return None
+            parts = parent.partitions
+            batches: List[UnitBatch] = []
+            last_block_end: List[float] = [float("-inf")]  # shared across node's batches
+
+            def flush(run: List[int]) -> None:
+                # emit power-of-two-sized batches only (the executor's k is
+                # already a power of two; this quantises the tail remainder
+                # too), so each (op, bucket) pair compiles a handful of fused
+                # executables that the warmup / first window fully covers
+                while len(run) >= 2:
+                    take = 1 << (len(run).bit_length() - 1)
+                    _flush_exact(run[:take])
+                    run = run[take:]
+                # a trailing singleton gains nothing over the unit path
+
+            def _flush_exact(chunk: List[int]) -> None:
+                group = [parts[i] for i in chunk]
+                plan = planner(node, inputs, group, bk)
+                if plan is None:
+                    return
+                dispatch, finalize = plan
+                rows = sum(p.nrows for p in group)
+                t_disp: List[float] = []
+
+                def disp(_d=dispatch, _t=t_disp):
+                    _t.append(time.perf_counter())
+                    return _d()
+
+                def fin(handle, _f=finalize, _t=t_disp, _rows=rows, _bk=bk):
+                    out = _f(handle)
+                    now = time.perf_counter()
+                    start = max(_t[0], last_block_end[0])
+                    last_block_end[0] = now
+                    self.cost_model.add_sample(node.op, _bk, _rows, now - start)
+                    return out
+
+                batches.append(
+                    UnitBatch(
+                        indices=list(chunk),
+                        dispatch=disp,
+                        finalize=fin,
+                        cost_s=sum(units[i].cost_s for i in chunk),
+                        tag=f"{node.op}[batch x{len(chunk)}]",
+                    )
+                )
+
+            # group by shape bucket *non-contiguously*: the think-time-aware
+            # partitioner sizes partitions by interaction hazard, so adjacent
+            # partitions often land in different buckets while e.g. the head
+            # and tail (or all mid partitions of an evenly-split table) share
+            # one.  Stable within a bucket, so batch contents are deterministic.
+            chunk: List[int] = []
+            bucket = None
+            for i in sorted(indices, key=lambda i: (BK.shape_bucket(parts[i]), i)):
+                b = BK.shape_bucket(parts[i])
+                if chunk and (b != bucket or len(chunk) >= max_batch):
+                    flush(chunk)
+                    chunk = []
+                bucket = b
+                chunk.append(i)
+            flush(chunk)
+            return batches or None
+
+        return make_batches
 
     def _read_bounds(self, node: Node):
         return node.kwargs["partition_bounds"]
@@ -131,7 +219,7 @@ class FrameRuntime:
         )
 
         # ---- partition-wise ops ---------------------------------------------
-        def make_pw(apply_fn):
+        def make_pw(apply_fn, batch_planner=None):
             def units(node: Node, inputs) -> List[Unit]:
                 parent: PTable = inputs[0]
                 extras = list(inputs[1:])
@@ -154,6 +242,9 @@ class FrameRuntime:
                 partitionwise=True,
                 apply_partition=apply_fn,
                 partition_cost=self._partition_cost,
+                make_batches=(
+                    self._batch_maker(batch_planner) if batch_planner else None
+                ),
             )
 
         def filter_expr(node: Node):
@@ -203,13 +294,20 @@ class FrameRuntime:
                 new[name] = Column(data=data, mask=None, dictionary=c.dictionary)
             return Partition(new, list(part.order))
 
-        def dropna_apply(node: Node, part: Partition, extras) -> Partition:
+        def dropna_keep(node: Node, part: Partition) -> np.ndarray:
+            """Row-validity mask for dropna — shared by the unbatched apply
+            and the batch planner so the two paths cannot diverge."""
             subset = node.kwargs.get("subset") or part.order
             keep = None
             for name in subset:
                 v = part.columns[name].valid_mask()
                 keep = v if keep is None else (keep & v)
-            return BK.select_rows(part, keep, backend=self.backend())
+            return keep
+
+        def dropna_apply(node: Node, part: Partition, extras) -> Partition:
+            return BK.select_rows(
+                part, dropna_keep(node, part), backend=self.backend()
+            )
 
         def join_apply(node: Node, part: Partition, extras) -> Partition:
             right: PTable = extras[0]
@@ -222,14 +320,29 @@ class FrameRuntime:
                 ),
             )()
 
-        eng.register_op("filter", make_pw(filter_apply))
-        eng.register_op("filter_cmp", make_pw(filter_apply))
-        eng.register_op("isin", make_pw(filter_apply))
-        eng.register_op("between", make_pw(filter_apply))
+        def filter_batch_planner(node, inputs, group, bk):
+            extras = list(inputs[1:])
+            return BK.plan_select_rows_batch(
+                group,
+                lambda: [
+                    predicate_mask(filter_expr(node), p, extras) for p in group
+                ],
+                backend=bk,
+            )
+
+        def dropna_batch_planner(node, inputs, group, bk):
+            return BK.plan_select_rows_batch(
+                group, lambda: [dropna_keep(node, p) for p in group], backend=bk
+            )
+
+        eng.register_op("filter", make_pw(filter_apply, filter_batch_planner))
+        eng.register_op("filter_cmp", make_pw(filter_apply, filter_batch_planner))
+        eng.register_op("isin", make_pw(filter_apply, filter_batch_planner))
+        eng.register_op("between", make_pw(filter_apply, filter_batch_planner))
         eng.register_op("project", make_pw(project_apply))
         eng.register_op("assign", make_pw(assign_apply))
         eng.register_op("fillna", make_pw(fillna_apply))
-        eng.register_op("dropna", make_pw(dropna_apply))
+        eng.register_op("dropna", make_pw(dropna_apply, dropna_batch_planner))
         eng.register_op("join", make_pw(join_apply))
 
         # ---- head / tail -----------------------------------------------------
@@ -290,11 +403,16 @@ class FrameRuntime:
                 for i, (p, c) in enumerate(zip(parent.partitions, costs))
             ]
 
+        stats_batches = self._batch_maker(
+            lambda node, inputs, group, bk: BK.plan_stats_batch(group, backend=bk)
+        )
+
         eng.register_op(
             "describe",
             OpRuntime(
                 units=stats_units,
                 combine=lambda n, i, r: B.stats_to_table(B.merge_stats(r)),
+                make_batches=stats_batches,
             ),
         )
         eng.register_op(
@@ -302,6 +420,7 @@ class FrameRuntime:
             OpRuntime(
                 units=stats_units,
                 combine=lambda n, i, r: B.means_to_table(B.merge_stats(r)),
+                make_batches=stats_batches,
             ),
         )
 
@@ -312,7 +431,11 @@ class FrameRuntime:
 
         eng.register_op(
             "mean_scalar",
-            OpRuntime(units=stats_units, combine=mean_scalar_combine),
+            OpRuntime(
+                units=stats_units,
+                combine=mean_scalar_combine,
+                make_batches=stats_batches,
+            ),
         )
 
         # ---- value_counts -------------------------------------------------------
@@ -338,7 +461,18 @@ class FrameRuntime:
             dictionary = inputs[0].partitions[0].columns[col].dictionary
             return B.merge_value_counts(results, dictionary, col)
 
-        eng.register_op("value_counts", OpRuntime(units=vc_units, combine=vc_combine))
+        eng.register_op(
+            "value_counts",
+            OpRuntime(
+                units=vc_units,
+                combine=vc_combine,
+                make_batches=self._batch_maker(
+                    lambda node, inputs, group, bk: BK.plan_value_counts_batch(
+                        group, node.kwargs["col"], backend=bk
+                    )
+                ),
+            ),
+        )
 
         # ---- groupby_agg ----------------------------------------------------------
         def gb_units(node, inputs):
@@ -373,6 +507,15 @@ class FrameRuntime:
                 units=gb_units,
                 combine=gb_combine,
                 combine_cost=lambda n, i: 0.05 * self._node_cost(n),
+                make_batches=self._batch_maker(
+                    lambda node, inputs, group, bk: BK.plan_groupby_batch(
+                        group,
+                        node.kwargs["by"],
+                        node.kwargs["aggs"],
+                        node.kwargs.get("topk"),
+                        backend=bk,
+                    )
+                ),
             ),
         )
 
@@ -411,6 +554,15 @@ class FrameRuntime:
                 units=sort_units,
                 combine=sort_combine,
                 combine_cost=lambda n, i: 0.25 * self._node_cost(n),
+                make_batches=self._batch_maker(
+                    lambda node, inputs, group, bk: BK.plan_sort_batch(
+                        group,
+                        node.kwargs["by"],
+                        node.kwargs.get("ascending", True),
+                        node.kwargs.get("limit"),
+                        backend=bk,
+                    )
+                ),
             ),
         )
 

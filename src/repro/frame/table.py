@@ -238,6 +238,30 @@ class PTable:
         return "\n".join(lines)
 
 
+def pydict_equal(a: Dict[str, np.ndarray], b: Dict[str, np.ndarray]) -> bool:
+    """Exact equality of two ``to_pydict()`` results: identical column sets
+    and dtypes, bit-equal values (NaN matches NaN), ``None``-aware object
+    columns.  The bit-for-bit oracle used by the batched-execution parity
+    tests and ``bench_background``'s ``batched_bit_for_bit`` invariant."""
+    if set(a) != set(b):
+        return False
+    for k in a:
+        x, y = a[k], b[k]
+        if x.dtype != y.dtype or len(x) != len(y):
+            return False
+        if x.dtype.kind == "f":
+            if not np.array_equal(x, y, equal_nan=True):
+                return False
+        elif x.dtype == object:
+            if any(
+                not ((u is None and v is None) or u == v) for u, v in zip(x, y)
+            ):
+                return False
+        elif not np.array_equal(x, y):
+            return False
+    return True
+
+
 def from_pydict(data: Dict[str, np.ndarray], npartitions: int = 1) -> PTable:
     """Build a PTable from host arrays (strings become dictionary-encoded)."""
     cols: Dict[str, Column] = {}

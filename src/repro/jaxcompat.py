@@ -1,0 +1,85 @@
+"""Compatibility shims over drifting jax APIs (mesh construction and context).
+
+The launch/dist layers target the current mesh API surface —
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``,
+``jax.set_mesh`` and top-level ``jax.shard_map`` — which older jax releases
+(like the 0.4.x line pinned in some environments) spell differently or lack
+entirely:
+
+* ``axis_types`` / ``AxisType``: absent before the explicit-sharding work —
+  meshes default to auto axes, which is exactly what ``AxisType.Auto``
+  requests, so the kwarg is simply dropped.
+* ``jax.set_mesh``: predecessors are ``jax.sharding.use_mesh`` and, before
+  that, nothing — every call site here passes explicit ``NamedSharding``s, so
+  an ambient-mesh context manager degrades safely to a no-op context.
+* ``jax.shard_map``: previously ``jax.experimental.shard_map.shard_map``
+  (same signature for the subset used here).
+
+Import from this module instead of feature-testing jax inline; it keeps the
+version probes in one place (and keeps the dry-run contract: importing this
+module never touches device state).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional, Sequence
+
+import jax
+
+
+def axis_type_auto():
+    """``jax.sharding.AxisType.Auto`` where it exists, else None."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    return None if axis_type is None else axis_type.Auto
+
+
+def make_mesh(
+    shape: Sequence[int],
+    axis_names: Sequence[str],
+    devices: Optional[Sequence] = None,
+):
+    """``jax.make_mesh`` with all axes Auto, across the axis_types drift."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    auto = axis_type_auto()
+    if auto is not None:
+        try:
+            return jax.make_mesh(
+                tuple(shape), tuple(axis_names),
+                axis_types=(auto,) * len(tuple(axis_names)), **kwargs,
+            )
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(tuple(shape), tuple(axis_names), **kwargs)
+
+
+@contextmanager
+def _null_mesh_ctx(mesh):
+    yield mesh
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` → ``jax.sharding.use_mesh`` → no-op, in that order.  The
+    no-op fallback is sound for this repo's call sites: they all pass explicit
+    ``NamedSharding``s / meshes to ``jit`` and ``shard_map``, so the ambient
+    mesh is only a convenience."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    setter = getattr(jax.sharding, "use_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return _null_mesh_ctx(mesh)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Top-level ``jax.shard_map`` where it exists, else the experimental one."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as exp_shard_map
+
+    return exp_shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)

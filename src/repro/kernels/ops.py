@@ -207,10 +207,12 @@ def masked_stats_batch(xs, ms) -> jnp.ndarray:
     return jnp.stack([_stats_pallas(xs[i], ms[i], interpret=interp) for i in range(c)])
 
 
-@functools.partial(jax.jit, static_argnames=("k", "largest"))
-def _topk_xla(x: jnp.ndarray, k: int, largest: bool) -> jnp.ndarray:
+def _topk_body(x: jnp.ndarray, k: int, largest: bool) -> jnp.ndarray:
     vals, _ = jax.lax.top_k(x if largest else -x, k)
     return vals if largest else -vals
+
+
+_topk_xla = functools.partial(jax.jit, static_argnames=("k", "largest"))(_topk_body)
 
 
 def topk_padded(x, k: int, largest: bool = True) -> jnp.ndarray:
@@ -284,13 +286,15 @@ def split_f64(keys) -> Tuple:
     return hi, mid, lo
 
 
-@jax.jit
-def _sort_order_xla(hi: jnp.ndarray, mid: jnp.ndarray, lo: jnp.ndarray):
+def _sort_order_body(hi: jnp.ndarray, mid: jnp.ndarray, lo: jnp.ndarray):
     iota = jnp.arange(hi.shape[0], dtype=jnp.int32)
     _, _, _, order = jax.lax.sort(
         (hi, mid, lo, iota), num_keys=3, is_stable=True
     )
     return order
+
+
+_sort_order_xla = jax.jit(_sort_order_body)
 
 
 def sort_order_padded(hi, mid, lo) -> jnp.ndarray:
@@ -359,10 +363,7 @@ def join_probe_padded(r_sorted, l_keys) -> Tuple[jnp.ndarray, jnp.ndarray]:
 # -- batched groupby partials -------------------------------------------------
 
 
-@functools.partial(
-    jax.jit, static_argnames=("num_buckets", "modes", "valid_idx", "tile")
-)
-def _segment_batch_xla(
+def _segment_batch_body(
     keys: jnp.ndarray,  # int32[n]
     values: Tuple[jnp.ndarray, ...],  # S × f32[n]
     valids: Tuple[jnp.ndarray, ...],  # V × bool[n]
@@ -430,6 +431,10 @@ def _segment_batch_xla(
     return reds, cnts
 
 
+_segment_batch_xla = functools.partial(jax.jit, static_argnames=(
+    "num_buckets", "modes", "valid_idx", "tile"))(_segment_batch_body)
+
+
 def segment_reduce_batch(
     keys,
     values: Sequence,  # S value rows, f32[n]
@@ -479,3 +484,199 @@ def segment_reduce_batch(
     ]
     reds = jnp.stack(red_rows) if red_rows else jnp.zeros((0, num_buckets))
     return reds, jnp.stack(cnt_rows)
+
+
+# --------------------------------------------------------------------------- #
+# Multi-partition fused batches                                                #
+#                                                                              #
+# The padded entry points above amortise *recompiles* across partitions but    #
+# still cost one host→device round-trip per partition — the dispatch-bound     #
+# regime that starves the background loop.  The ``*_parts`` wrappers fuse k    #
+# same-bucket partitions into ONE dispatch via ``jax.lax.map`` over the        #
+# stacked per-partition inputs.  lax.map runs the *identical* per-partition    #
+# computation as a device-side loop (not a vmapped/reassociated variant), so   #
+# every partition's result is bit-for-bit what the unbatched entry point       #
+# returns — the property the frame layer's batched/unbatched parity tests pin  #
+# down.  Callers group partitions by shape bucket (`pad_len`) so one stacked   #
+# array and one compiled executable covers the whole batch.                    #
+#                                                                              #
+# These wrappers never block: they return device arrays, and JAX async         #
+# dispatch lets the executor launch the next batch while this one computes.    #
+# --------------------------------------------------------------------------- #
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_buckets", "modes", "valid_idx", "tile")
+)
+def _segment_parts_xla(
+    keys: jnp.ndarray,  # int32[P, nb]
+    values: Tuple[jnp.ndarray, ...],  # S × f32[P, nb]
+    valids: Tuple[jnp.ndarray, ...],  # V × bool[P, nb]
+    num_buckets: int,
+    modes: Tuple[str, ...],
+    valid_idx: Tuple[int, ...],
+    tile: int,
+):
+    return jax.lax.map(
+        lambda kvm: _segment_batch_body(
+            kvm[0], kvm[1], kvm[2], num_buckets, modes, valid_idx, tile
+        ),
+        (keys, values, valids),
+    )
+
+
+def segment_reduce_batch_parts(
+    keys_parts: Sequence,  # P × int32[n_p]
+    values_parts: Sequence[Sequence],  # P × (S × f32[n_p])
+    valids_parts: Sequence[Sequence],  # P × (V × bool[n_p])
+    num_buckets: int,
+    modes: Sequence[str],
+    valid_idx: Sequence[int],
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """k partitions' batched segment reductions in one dispatch.
+
+    Every partition must share the same shape bucket (``pad_len``) and the
+    same agg plan (S, V, modes, valid_idx) — callers group accordingly.
+    Returns ``(reds (P, S, nb), counts (P, V, nb))`` device arrays, each
+    ``[p]`` slice bit-for-bit equal to :func:`segment_reduce_batch` on that
+    partition alone.
+    """
+    nbs = {pad_len(int(jnp.shape(k)[0])) for k in keys_parts}
+    if len(nbs) != 1:
+        raise ValueError(f"partitions span shape buckets {sorted(nbs)}; group first")
+    nb = nbs.pop()
+    keys = jnp.stack([_pad1(jnp.asarray(k, jnp.int32), nb, 0) for k in keys_parts])
+    S = len(modes)
+    V = len(valids_parts[0])
+    values = tuple(
+        jnp.stack(
+            [_pad1(jnp.asarray(vp[s], jnp.float32), nb, 0.0) for vp in values_parts]
+        )
+        for s in range(S)
+    )
+    valids = tuple(
+        jnp.stack(
+            [_pad1(jnp.asarray(mp[v], bool), nb, False) for mp in valids_parts]
+        )
+        for v in range(V)
+    )
+    if backend() == "xla":
+        return _segment_parts_xla(
+            keys, values, valids, int(num_buckets),
+            tuple(modes), tuple(int(i) for i in valid_idx), min(_TILE, nb),
+        )
+    # pallas / interpret: no fused path yet — loop per partition (still one
+    # call site; correctness-only backends on this container)
+    reds_all, cnts_all = [], []
+    for p in range(len(keys_parts)):
+        reds, cnts = segment_reduce_batch(
+            keys_parts[p], list(values_parts[p]), list(valids_parts[p]),
+            num_buckets, list(modes), list(valid_idx),
+        )
+        reds_all.append(reds)
+        cnts_all.append(cnts)
+    return jnp.stack(reds_all), jnp.stack(cnts_all)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "largest"))
+def _topk_parts_xla(xs: jnp.ndarray, k: int, largest: bool) -> jnp.ndarray:
+    return jax.lax.map(lambda x: _topk_body(x, k, largest), xs)
+
+
+def _stack_host_padded(rows: Sequence, nb: int, fill, dtype) -> jnp.ndarray:
+    """Pad + stack *host* arrays on host, then upload once.  Stacking on
+    device instead would cost one transfer per row — exactly the per-dispatch
+    overhead the fused entry points exist to amortise."""
+    out = np.full((len(rows), nb), fill, dtype)
+    for i, r in enumerate(rows):
+        r = np.asarray(r, dtype)
+        out[i, : r.shape[0]] = r
+    return jnp.asarray(out)
+
+
+def topk_padded_parts(xs_parts: Sequence, k: int, largest: bool = True) -> jnp.ndarray:
+    """k partitions' top-k winner values in one dispatch: (P, k) device array,
+    each row bit-for-bit :func:`topk_padded` on that partition alone.  All
+    partitions must share a shape bucket."""
+    nbs = {pad_len(int(np.shape(x)[0])) for x in xs_parts}
+    if len(nbs) != 1:
+        raise ValueError(f"partitions span shape buckets {sorted(nbs)}; group first")
+    nb = nbs.pop()
+    sentinel = np.float32(-np.inf if largest else np.inf)
+    xs = _stack_host_padded(xs_parts, nb, sentinel, np.float32)
+    if backend() == "xla":
+        return _topk_parts_xla(xs, k, largest)
+    return jnp.stack([topk(xs[p], k, largest=largest) for p in range(xs.shape[0])])
+
+
+@jax.jit
+def _sort_order_parts_xla(hi: jnp.ndarray, mid: jnp.ndarray, lo: jnp.ndarray):
+    return jax.lax.map(lambda t: _sort_order_body(*t), (hi, mid, lo))
+
+
+def argsort_f64_parts(keys_parts: Sequence) -> jnp.ndarray:
+    """k partitions' stable exact-split argsorts in one dispatch: (P, nb)
+    int32 device array; row p's first ``len(keys_parts[p])`` entries are
+    bit-for-bit :func:`argsort_f64` on that partition alone.  Preconditions
+    per partition as for :func:`argsort_f64` (callers gate with
+    ``_sort_keys_exact``); all partitions must share a shape bucket."""
+    nbs = {pad_len(len(k)) for k in keys_parts}
+    if len(nbs) != 1:
+        raise ValueError(f"partitions span shape buckets {sorted(nbs)}; group first")
+    nb = nbs.pop()
+    splits = [split_f64(k) for k in keys_parts]
+    his = _stack_host_padded([s[0] for s in splits], nb, np.float32(np.inf), np.float32)
+    mids = _stack_host_padded([s[1] for s in splits], nb, np.float32(0.0), np.float32)
+    los = _stack_host_padded([s[2] for s in splits], nb, np.float32(0.0), np.float32)
+    return _sort_order_parts_xla(his, mids, los)
+
+
+@jax.jit
+def _filter_parts_xla(xs: jnp.ndarray, keeps: jnp.ndarray):
+    return jax.lax.map(lambda t: ref.filter_compact_ref(t[0], t[1], 0.0), (xs, keeps))
+
+
+def filter_compact_padded_parts(
+    xs_rows: Sequence, keeps_rows: Sequence
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stacked stable compactions in one dispatch: R rows (columns × batched
+    partitions) of values + keep masks → ``(out (R, nb), counts (R,))`` device
+    arrays, each row bit-for-bit :func:`filter_compact_padded` on that row
+    alone.  All rows must share a shape bucket."""
+    nbs = {pad_len(int(jnp.shape(x)[0])) for x in xs_rows}
+    if len(nbs) != 1:
+        raise ValueError(f"rows span shape buckets {sorted(nbs)}; group first")
+    nb = nbs.pop()
+    xs = jnp.stack([_pad1(jnp.asarray(x, jnp.float32), nb, 0.0) for x in xs_rows])
+    keeps = jnp.stack(
+        [_pad1(jnp.asarray(m, bool), nb, False) for m in keeps_rows]
+    )
+    if backend() == "xla":
+        return _filter_parts_xla(xs, keeps)
+    outs, cnts = [], []
+    for p in range(xs.shape[0]):
+        o, c = filter_compact(xs[p], keeps[p], fill=0.0)
+        outs.append(o)
+        cnts.append(c)
+    return jnp.stack(outs), jnp.stack(cnts)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def _masked_stats_rows_map_xla(xs: jnp.ndarray, ms: jnp.ndarray, tile: int):
+    return jax.lax.map(lambda t: _stats_row_tiled(t[0], t[1], tile), (xs, ms))
+
+
+def masked_stats_batch_parts(
+    xs_rows: Sequence, ms_rows: Sequence
+) -> jnp.ndarray:
+    """Stacked masked-stats rows (k partitions × C columns) in one dispatch:
+    (R, 5) device array.  Each row runs the same ``_stats_row_tiled`` body as
+    :func:`masked_stats_batch` — via ``lax.map`` over the stacked leading
+    axis, so the compiled body is independent of R (the unrolled form would
+    recompile for every distinct fused batch size).  Bit-for-bit per row;
+    all rows must share a shape bucket (checked by the concatenate)."""
+    xs = jnp.concatenate([jnp.asarray(x, jnp.float32) for x in xs_rows])
+    ms = jnp.concatenate([jnp.asarray(m, bool) for m in ms_rows])
+    if backend() == "xla" and xs.shape[1] == pad_len(xs.shape[1], minimum=1):
+        return _masked_stats_rows_map_xla(xs, ms, min(_TILE, xs.shape[1]))
+    return masked_stats_batch(xs, ms)

@@ -1,0 +1,313 @@
+"""Batched background execution: UnitBatch preemption/resume semantics,
+batched-vs-unbatched bit-for-bit parity, incremental scheduler equivalence,
+and cost-model persistence."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import Engine
+from repro.core.costmodel import CostModel
+from repro.core.dag import DAG
+from repro.core.executor import OpRuntime, Preempted, Unit, UnitBatch
+from repro.core.scheduler import Scheduler
+from repro.frame import Catalog, ColSpec, Session, TableSpec
+from repro.frame.partitioner import uniform_partitions
+from repro.frame.table import pydict_equal
+
+
+# --------------------------------------------------------------------------- #
+# a fully controllable batched operator                                        #
+# --------------------------------------------------------------------------- #
+
+
+def _install_batched_op(engine, n_units=10, unit_cost=1.0, calls=None,
+                        on_dispatch=None):
+    calls = calls if calls is not None else {}
+    calls.setdefault("unit", 0)
+    calls.setdefault("dispatch", 0)
+
+    def units(node, inputs):
+        def run_unit(i):
+            calls["unit"] += 1
+            return i * 10
+
+        return [
+            Unit(fn=(lambda i=i: run_unit(i)), cost_s=unit_cost, tag=f"u{i}")
+            for i in range(n_units)
+        ]
+
+    def make_batches(node, inputs, units_, indices, k):
+        batches = []
+        for a in range(0, len(indices), k):
+            chunk = list(indices[a:a + k])
+
+            def disp(c=chunk):
+                calls["dispatch"] += 1
+                if on_dispatch is not None:
+                    on_dispatch(calls["dispatch"])
+                return [j * 10 for j in c]
+
+            batches.append(
+                UnitBatch(
+                    indices=chunk, dispatch=disp, finalize=lambda h: h,
+                    cost_s=unit_cost * len(chunk), tag=f"b{a}",
+                )
+            )
+        return batches
+
+    engine.register_op(
+        "batched_synth",
+        OpRuntime(units=units, combine=lambda n, i, r: sum(r),
+                  make_batches=make_batches),
+    )
+    return calls
+
+
+def test_batch_size_from_budget():
+    from repro.core.executor import Executor
+
+    units = [Unit(fn=lambda: None, cost_s=0.5) for _ in range(10)]
+    missing = list(range(10))
+    assert Executor._batch_size(units, missing, 2.0) == 4
+    assert Executor._batch_size(units, missing, 0.1) == 1  # never below 1
+    # capped at len(missing), then floored to a power of two (jit shape reuse)
+    assert Executor._batch_size(units, missing, 100.0) == 8
+    assert Executor._batch_size(units, missing, 3.5) == 4  # 7 → pow2 floor
+    zero = [Unit(fn=lambda: None, cost_s=0.0) for _ in range(4)]
+    assert Executor._batch_size(zero, [0, 1, 2, 3], 1.0) == 4
+
+
+def test_midbatch_preemption_loses_at_most_one_batch_and_resumes():
+    eng = Engine(mode="sim", batch_loss_frac=0.5)  # budget 3s → k = 3 → pow2 2
+    calls = _install_batched_op(eng, n_units=10, unit_cost=1.0)
+    node = eng.add("batched_synth", kwargs={"cost_s": 10.0})
+    eng.think(5.0)
+    # batches [0,1] and [2,3] fit (spent 4); batch [4,5] would straddle the
+    # arrival: exactly that one batch is lost, completed slots checkpointed
+    assert eng.executor.stats.units_preempted_lost == 2
+    prog = eng.partials[node.nid]
+    assert sorted(prog.results) == [0, 1, 2, 3]
+    assert eng.executor.stats.units_run == 4
+    # resume: the remaining 7 units complete without recomputing slots 0-2
+    eng.think(20.0)
+    assert node.nid in eng.cache
+    assert eng.cache.get(node) == sum(i * 10 for i in range(10))
+    assert eng.executor.stats.units_run == 10  # no slot ran twice
+    assert calls["unit"] == 0  # everything rode batches
+
+
+def test_real_mode_preempt_harvests_inflight_batch():
+    eng = Engine(mode="real", batch_loss_frac=0.5)
+    flag = {"stop": False}
+
+    def stop_after_first(dispatch_no):
+        if dispatch_no == 1:
+            flag["stop"] = True
+
+    calls = _install_batched_op(
+        eng, n_units=9, unit_cost=1.0, on_dispatch=stop_after_first
+    )
+    node = eng.add("batched_synth", kwargs={"cost_s": 9.0})
+    with pytest.raises(Preempted):
+        eng.executor.execute(
+            node, [], eng.partials, preempt_check=lambda: flag["stop"],
+            batch_budget_s=3.0,  # k = 3 → pow2-quantised to 2
+        )
+    # the dispatched batch was harvested, not thrown away
+    prog = eng.partials[node.nid]
+    assert sorted(prog.results) == [0, 1]
+    assert eng.executor.stats.units_run == 2
+    flag["stop"] = False
+    value = eng.executor.execute(
+        node, [], eng.partials, preempt_check=lambda: flag["stop"],
+        batch_budget_s=3.0,
+    )
+    assert value == sum(i * 10 for i in range(9))
+    assert eng.executor.stats.units_run == 9  # resumed, never recomputed
+
+
+def test_unbatchable_op_unchanged_unit_semantics():
+    """Ops without make_batches keep the paper's one-unit preemption."""
+    eng = Engine(mode="sim")
+    node = eng.add(
+        "synthetic", kwargs={"cost_s": 10.0, "n_units": 10, "tag": "b"}
+    )
+    from repro.frame.io import Catalog as _Cat
+    from repro.frame.runtime import install
+
+    install(eng, _Cat())
+    eng.think(3.5)
+    assert eng.executor.stats.units_preempted_lost == 1
+    assert len(eng.partials[node.nid].results) == 3
+
+
+# --------------------------------------------------------------------------- #
+# frame-layer parity: batched == unbatched, bit for bit                        #
+# --------------------------------------------------------------------------- #
+
+
+def _batch_session(batching: bool):
+    cat = Catalog()
+    cat.register(
+        TableSpec(
+            "t", nrows=32_000,
+            cols=(
+                ColSpec("x", low=0.0, high=10.0),
+                ColSpec("y", null_frac=0.2),
+                ColSpec("k", kind="cat", n_categories=7),
+            ),
+            io_seconds=2.0, seed=7,
+        )
+    )
+    s = Session(catalog=cat, mode="sim", kernel_backend="xla", batching=batching)
+    df = s.read_table("t")
+    df.node.kwargs = dict(df.node.kwargs)
+    df.node.kwargs["partition_bounds"] = uniform_partitions(32_000, 8)
+    nodes = [
+        df.describe().node,
+        df.groupby("k").agg({"x": "mean", "y": "sum"}).node,
+        df["k"].value_counts().node,
+        df[df["x"] > 5.0].node,
+        df.dropna().node,
+        df.sort_values("x").node,
+        df.sort_values("y", ascending=False).node,
+        s.engine.add(
+            "sort_values", parents=[df.node],
+            kwargs={"by": "x", "ascending": False, "limit": 16},
+            est_rows=df.node.est_rows,
+        ),
+    ]
+    s.think(1000.0)
+    s.drain()
+    return s, nodes
+
+
+def test_batched_results_bit_for_bit_across_partitionwise_ops():
+    s_b, nodes_b = _batch_session(batching=True)
+    s_u, nodes_u = _batch_session(batching=False)
+    stats = s_b.engine.executor.stats
+    assert stats.batches_run > 0 and stats.units_batched > 0
+    assert s_u.engine.executor.stats.units_batched == 0
+    # identical unit accounting and virtual-clock time either way
+    assert stats.units_run == s_u.engine.executor.stats.units_run
+    assert s_b.engine.clock.now() == pytest.approx(s_u.engine.clock.now())
+    for nb, nu in zip(nodes_b, nodes_u):
+        vb = s_b.engine.value_of(nb)
+        vu = s_u.engine.value_of(nu)
+        assert pydict_equal(vb.to_pydict(), vu.to_pydict()), nb.label
+
+
+# --------------------------------------------------------------------------- #
+# incremental scheduler ≡ brute force                                          #
+# --------------------------------------------------------------------------- #
+
+
+def test_incremental_scheduler_matches_bruteforce_under_evictions():
+    """Delta-maintained memos vs the memo-free oracle, with eviction events
+    and cost-model drift (EWMA observations between picks) interleaved."""
+    rng = random.Random(3)
+    for trial in range(3):
+        d = DAG()
+        nodes = []
+        for i in range(40):
+            k = rng.randint(0, min(3, len(nodes)))
+            parents = rng.sample(nodes, k) if k else []
+            nodes.append(
+                d.add("synthetic", parents,
+                      kwargs={"cost_s": rng.uniform(0.1, 5.0),
+                              "tag": f"n{trial}_{i}"})
+            )
+        # some nodes carry no explicit cost: their estimates drift as the
+        # EWMA observes executions, which must invalidate the memos too
+        drifty = [
+            d.add("synthetic", [nodes[j]], kwargs={"tag": f"drift{trial}_{j}"})
+            for j in range(0, 40, 8)
+        ]
+        cm = CostModel()
+        sched = Scheduler(dag=d, cost_model=cm, policy="utility")
+        done: set = set()
+        for _ in range(300):
+            p_new = sched.pick(done)
+            p_ref = sched.reference_pick(done)
+            assert (p_new is None) == (p_ref is None)
+            if p_new is None:
+                break
+            assert p_new.nid == p_ref.nid
+            done.add(p_new.nid)
+            if rng.random() < 0.3 and done:  # eviction event
+                victim = rng.choice(sorted(done))
+                done.discard(victim)
+                sched.evicted_once.add(victim)
+            if rng.random() < 0.4:  # cost-model drift between picks
+                cm.observe(rng.choice(drifty), rng.uniform(0.01, 2.0))
+
+
+def test_evicted_source_demand_memo_tracks_new_descendants():
+    d = DAG()
+    r = d.add("synthetic", kwargs={"cost_s": 1.0, "tag": "r"})
+    a = d.add("synthetic", [r], kwargs={"cost_s": 1.0, "tag": "a"})
+    cm = CostModel()
+    s = Scheduler(dag=d, cost_model=cm)
+    done = {r.nid, a.nid}
+    # r evicted with every descendant executed: no demand, skipped (twice, so
+    # the second call hits the memo)
+    done.discard(r.nid)
+    s.evicted_once.add(r.nid)
+    assert s.pick(done) is None
+    assert s.pick(done) is None
+    # a new unexecuted descendant restores demand (structure change clears)
+    b = d.add("synthetic", [r], kwargs={"cost_s": 1.0, "tag": "b"})
+    assert s.pick(done).nid == r.nid
+
+
+def test_plan_matches_repeated_pick():
+    d = DAG()
+    r = d.add("synthetic", kwargs={"cost_s": 1.0, "tag": "pr"})
+    a = d.add("synthetic", [r], kwargs={"cost_s": 10.0, "tag": "pa"})
+    b = d.add("synthetic", [a], kwargs={"cost_s": 1.0, "tag": "pb"})
+    c = d.add("synthetic", [r], kwargs={"cost_s": 2.0, "tag": "pc"})
+    cm = CostModel()
+    s = Scheduler(dag=d, cost_model=cm)
+    order = [n.nid for n in s.plan(set())]
+    # r first (only source); then a (U=21 beats c's 2); then c (U=2 beats b's 1)
+    assert order == [r.nid, a.nid, c.nid, b.nid]
+
+
+# --------------------------------------------------------------------------- #
+# cost model persistence + auto recalibration                                  #
+# --------------------------------------------------------------------------- #
+
+
+def test_cost_model_save_load_roundtrip(tmp_path):
+    cm = CostModel()
+    cm.add_sample("describe", "xla", 1000, 0.002)
+    cm.add_sample("describe", "xla", 2000, 0.004)
+    cm.add_sample("groupby_agg", "numpy", 1000, 0.01)
+    fitted = cm.calibrate()
+    path = str(tmp_path / "costs.json")
+    cm.save(path)
+    fresh = CostModel()
+    assert fresh.load(path)
+    for key, cost in fitted.items():
+        assert fresh.unit_cost(key[0], key[1]) == pytest.approx(cost)
+    assert not CostModel().load(str(tmp_path / "missing.json"))
+
+
+def test_cost_model_auto_recalibrates_every_n_samples():
+    cm = CostModel(auto_calibrate_every=3)
+    for i in range(2):
+        cm.add_sample("describe", "xla", 1000, 0.002)
+    assert ("describe", "xla") not in cm._backend_unit_cost
+    cm.add_sample("describe", "xla", 1000, 0.002)  # 3rd sample triggers refit
+    assert cm.unit_cost("describe", "xla") == pytest.approx(2e-6)
+
+
+def test_engine_persists_costs_across_sessions(tmp_path):
+    path = str(tmp_path / "engine_costs.json")
+    eng = Engine(mode="real", cost_model_path=path)
+    assert eng.cost_model.auto_calibrate_every > 0  # real mode auto-refit
+    eng.cost_model.add_sample("describe", "xla", 1000, 0.002)
+    eng.save_cost_model()
+    eng2 = Engine(mode="real", cost_model_path=path)
+    assert eng2.cost_model.unit_cost("describe", "xla") == pytest.approx(2e-6)
