@@ -17,6 +17,13 @@ from .cse import merge_common_subexpressions
 from .dag import DAG, Node, DEFAULT_INTERACTION_OPS, PARAMETRIC_OPS
 from .engine import Engine, Metrics
 from .executor import OpRuntime, PartialProgress, Preempted, Registry, Unit
+from .faults import (
+    CorruptResult,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    InjectedResourceExhausted,
+)
 from .predictor import InteractionPredictor
 from .scheduler import Scheduler
 from .slicing import (
@@ -37,4 +44,6 @@ __all__ = [
     "source_operators", "unexecuted_critical", "count_non_critical_before",
     "merge_common_subexpressions", "result_nbytes",
     "DEFAULT_INTERACTION_OPS", "PARAMETRIC_OPS",
+    "FaultPlan", "FaultSpec", "InjectedFault", "InjectedResourceExhausted",
+    "CorruptResult",
 ]

@@ -18,6 +18,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, Optional
 
+from . import faults as _faults
 from .costmodel import CostModel
 from .dag import Node
 
@@ -57,6 +58,9 @@ class MaterializedCache:
     policy: EvictionPolicy = "corrected"
     gc_threshold: float = 0.8  # paper §4.3
     on_evict: Optional[Callable[[Node], None]] = None
+    # chaos harness: the cache.put / cache.get injection sites (background-only
+    # by default — see core.faults).  None disables injection entirely.
+    fault_plan: Optional[Any] = None
 
     _entries: Dict[int, CacheEntry] = field(default_factory=dict)
     _T: int = 0  # paper's global reuse counter
@@ -73,6 +77,11 @@ class MaterializedCache:
         return set(self._entries)
 
     def get(self, node: Node) -> Any:
+        mode = (
+            self.fault_plan.fire("cache.get", op=node.op)  # may raise / sleep
+            if self.fault_plan is not None
+            else None
+        )
         entry = self._entries.get(node.nid)
         if entry is None:
             self.n_misses += 1
@@ -80,6 +89,10 @@ class MaterializedCache:
         self.n_hits += 1
         self._T += 1  # paper: increment T on each reuse
         entry.t_last_use = self._T
+        if mode == "corrupt":
+            # transient read corruption: the stored entry stays intact, the
+            # reader gets a detectably-poisoned value
+            return _faults.corrupt(entry.value)
         return entry.value
 
     def peek(self, nid: int) -> Optional[Any]:
@@ -87,6 +100,12 @@ class MaterializedCache:
         return None if e is None else e.value
 
     def put(self, node: Node, value: Any, speculative: bool = False) -> None:
+        if self.fault_plan is not None:
+            mode = self.fault_plan.fire("cache.put", op=node.op)  # may raise
+            if mode == "corrupt":
+                # the stored copy is poisoned; every consumer boundary
+                # (foreground _ensure, background input fetch) detects it
+                value = _faults.corrupt(value)
         m = result_nbytes(value)
         old = self._entries.pop(node.nid, None)
         if old is not None:

@@ -225,10 +225,23 @@ class CostModel:
                 for op, st in sorted(self._stats.items())
             },
         }
-        tmp = f"{path}.tmp"
-        with open(tmp, "w") as f:
-            json.dump(payload, f, indent=2, sort_keys=True)
-        os.replace(tmp, path)
+        # crash-safe write: unique temp name (two sessions saving to the same
+        # path must not clobber each other's half-written temp), fsync before
+        # the atomic rename (a crash after replace() must not leave a torn
+        # file), and temp cleanup on any failure
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     def load(self, path: str) -> bool:
         """Install previously fitted costs; returns False if the file is

@@ -19,11 +19,13 @@ Two engines per process are fine; state is fully instance-local.
 """
 from __future__ import annotations
 
+import logging
 import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+from . import faults
 from .cache import EvictionPolicy, MaterializedCache
 from .clock import Clock, RealClock, VirtualClock
 from .costmodel import CostModel
@@ -35,6 +37,9 @@ from .executor import (
     Preempted,
     Registry,
 )
+from .faults import FaultPlan
+
+logger = logging.getLogger("repro.engine")
 from .predictor import InteractionPredictor
 from .scheduler import Policy, Scheduler
 from .slicing import critical_path, unexecuted_critical
@@ -52,11 +57,47 @@ class InteractionRecord:
 
 
 @dataclass
+class BackgroundFault:
+    """One absorbed background failure (the worker survived it)."""
+
+    nid: int
+    op: str
+    kind: str  # exception class name
+    detail: str
+    at: float
+
+
+MAX_FAULT_RECORDS = 256  # bounded: a 100%-fault chaos run must not leak memory
+
+
+@dataclass
 class Metrics:
     interactions: List[InteractionRecord] = field(default_factory=list)
     sync_wait_s: float = 0.0
     think_s: float = 0.0
     background_busy_s: float = 0.0
+    # fault-domain observability (chaos runs assert on these)
+    background_faults: List[BackgroundFault] = field(default_factory=list)
+    n_background_faults: int = 0
+    worker_stalls: int = 0
+    corrupt_results_dropped: int = 0
+    quarantines: int = 0
+
+    def record_background_fault(
+        self, node: Node, exc: BaseException, at: float
+    ) -> None:
+        self.n_background_faults += 1
+        self.background_faults.append(
+            BackgroundFault(
+                nid=node.nid,
+                op=node.op,
+                kind=type(exc).__name__,
+                detail=str(exc)[:200],
+                at=at,
+            )
+        )
+        if len(self.background_faults) > MAX_FAULT_RECORDS:
+            del self.background_faults[: len(self.background_faults) - MAX_FAULT_RECORDS]
 
     def summary(self) -> dict:
         return {
@@ -69,6 +110,10 @@ class Metrics:
                 / max(1, len(self.interactions)),
                 6,
             ),
+            "n_background_faults": self.n_background_faults,
+            "worker_stalls": self.worker_stalls,
+            "corrupt_results_dropped": self.corrupt_results_dropped,
+            "quarantines": self.quarantines,
         }
 
 
@@ -89,9 +134,13 @@ class Engine:
         batch_loss_frac: float = 0.1,  # batch duration ≤ this × predicted think
         cost_model_path: Optional[str] = None,  # persist fitted unit costs
         recalibrate_every: int = 64,  # real mode: refit costs every N samples
+        fault_plan: Optional[FaultPlan] = None,  # chaos harness (None: env)
+        worker_ack_timeout_s: float = 60.0,  # pause-ack stall watchdog bound
     ):
         self.dag = DAG()
         self.cost_model = CostModel()
+        self.faults = fault_plan if fault_plan is not None else FaultPlan.from_env()
+        self.worker_ack_timeout_s = worker_ack_timeout_s
         self.batching = batching
         self.batch_loss_frac = batch_loss_frac
         self.cost_model_path = cost_model_path
@@ -109,6 +158,7 @@ class Engine:
             budget_bytes=budget_bytes,
             cost_model=self.cost_model,
             policy=cache_policy,
+            fault_plan=self.faults,
         )
         self.think_time = ThinkTimeModel()
         self.predictor = predictor
@@ -127,7 +177,9 @@ class Engine:
             seed=seed,
             extra_utility=self.speculation.boost_for,
         )
-        self.executor = Executor(self.registry, self.clock, self.cost_model)
+        self.executor = Executor(
+            self.registry, self.clock, self.cost_model, fault_plan=self.faults
+        )
         self.partials: Dict[int, PartialProgress] = {}
         self.speculation.partials = self.partials
         self.cache.on_evict = lambda node: self.scheduler.evicted_once.add(node.nid)
@@ -172,7 +224,18 @@ class Engine:
 
     def _ensure(self, node: Node, budget_s: Optional[float] = None) -> Any:
         if node.nid in self.cache:
-            return self.cache.get(node)
+            value = self.cache.get(node)
+            if not faults.is_corrupt(value):
+                return value
+            # graceful degradation: a poisoned background result must never
+            # reach the user — drop it and recompute on the foreground path
+            # (where no background-only faults are injected)
+            self.cache.drop(node.nid)
+            self.partials.pop(node.nid, None)
+            self.metrics.corrupt_results_dropped += 1
+            logger.warning(
+                "dropped corrupted cached result for %s; recomputing", node.label
+            )
         impl = self.registry[node.op]
         inputs = []
         pinned = []
@@ -382,7 +445,7 @@ class Engine:
         """Simulation: user thinks for ``seconds`` of virtual time while the
         scheduler opportunistically executes non-critical operators."""
         assert self.clock.virtual, "think() is for simulation mode; use start_background() in real mode"
-        with self._lock:
+        with self._lock, faults.background():
             t_start = self.clock.now()
             deadline = t_start + seconds
             executed_any = True
@@ -390,24 +453,29 @@ class Engine:
                 remaining = deadline - self.clock.now()
                 if remaining <= 0:
                     break
-                node = self.scheduler.pick(self.cache.executed_ids())
+                node = self.scheduler.pick(
+                    self.cache.executed_ids(), now=self.clock.now()
+                )
                 if node is None:
                     break
-                impl = self.registry[node.op]
-                inputs = (
-                    [self.cache.get(p) for p in node.parents]
-                    if impl.needs_inputs
-                    else []
-                )
                 try:
+                    impl = self.registry[node.op]
+                    inputs = (
+                        self._background_inputs(node) if impl.needs_inputs else []
+                    )
                     value = self.executor.execute(
                         node, inputs, self.partials, budget_s=remaining,
                         batch_budget_s=self._batch_budget_s(remaining),
                     )
+                    if faults.is_corrupt(value):
+                        raise faults.CorruptResult(node.label)
                     self.cache.put(node, value)
                     self._record_rows(node, value)
+                    self.scheduler.clear_quarantine(node.nid)
                 except Preempted:
                     break  # budget exhausted mid-unit; progress checkpointed
+                except Exception as exc:  # crash isolation (fault domain)
+                    self._absorb_background_fault(node, exc)
             busy = self.clock.now() - t_start
             self.metrics.background_busy_s += busy
             if self.clock.now() < deadline:  # idle remainder of think time
@@ -415,26 +483,69 @@ class Engine:
             return {"busy_s": busy, "idle_s": seconds - busy}
 
     def drain_background(self) -> int:
-        """Run all remaining non-critical work to completion (no budget)."""
+        """Run all remaining non-critical work to completion (no budget).
+
+        Nodes in active quarantine are skipped — the drain completes with
+        them unexecuted rather than spinning on a failing fault domain."""
         n = 0
-        with self._lock:
+        with self._lock, faults.background():
             while True:
-                node = self.scheduler.pick(self.cache.executed_ids())
+                node = self.scheduler.pick(
+                    self.cache.executed_ids(), now=self.clock.now()
+                )
                 if node is None:
                     return n
-                impl = self.registry[node.op]
-                inputs = (
-                    [self.cache.get(p) for p in node.parents]
-                    if impl.needs_inputs
-                    else []
-                )
-                value = self.executor.execute(
-                    node, inputs, self.partials,
-                    batch_budget_s=self._batch_budget_s(),
-                )
-                self.cache.put(node, value)
-                self._record_rows(node, value)
-                n += 1
+                try:
+                    impl = self.registry[node.op]
+                    inputs = (
+                        self._background_inputs(node) if impl.needs_inputs else []
+                    )
+                    value = self.executor.execute(
+                        node, inputs, self.partials,
+                        batch_budget_s=self._batch_budget_s(),
+                    )
+                    if faults.is_corrupt(value):
+                        raise faults.CorruptResult(node.label)
+                    self.cache.put(node, value)
+                    self._record_rows(node, value)
+                    self.scheduler.clear_quarantine(node.nid)
+                    n += 1
+                except Exception as exc:  # crash isolation (fault domain)
+                    self._absorb_background_fault(node, exc)
+
+    def _background_inputs(self, node: Node) -> List[Any]:
+        """Fetch materialised parents for background execution, refusing to
+        compute on a corrupted input (the parent is dropped for recompute)."""
+        inputs = []
+        for p in node.parents:
+            value = self.cache.get(p)
+            if faults.is_corrupt(value):
+                self.cache.drop(p.nid)
+                self.partials.pop(p.nid, None)
+                self.metrics.corrupt_results_dropped += 1
+                raise faults.CorruptResult(f"corrupted input {p.label}")
+            inputs.append(value)
+        return inputs
+
+    def _absorb_background_fault(self, node: Node, exc: BaseException) -> None:
+        """The crash-isolation boundary: record, quarantine, carry on.
+
+        Background failures must never kill the loop (the pre-fix behaviour
+        silently disabled all think-time optimisation forever) and must never
+        corrupt interactive results — the node re-enters scheduling after an
+        exponential backoff, and the interactive path recomputes it on the
+        foreground (numpy-fallback) path if demanded sooner."""
+        now = self.clock.now()
+        self.metrics.record_background_fault(node, exc, now)
+        self.metrics.quarantines += 1
+        entry = self.scheduler.quarantine(
+            node.nid, now, error=f"{type(exc).__name__}: {exc}"
+        )
+        logger.warning(
+            "background execution of %s failed (%s: %s); quarantined "
+            "(failures=%d, backoff until %.3f)",
+            node.label, type(exc).__name__, exc, entry.failures, entry.until,
+        )
 
     # ------------------------------------------------------- real-mode worker --
     def start_background(self) -> None:
@@ -477,7 +588,17 @@ class _FakeParts:
 
 class _BackgroundWorker:
     """Real-mode daemon thread running the think-time scheduler loop,
-    preempted between partition units (paper §4.3)."""
+    preempted between partition units (paper §4.3).
+
+    The loop is a *fault domain*: any failure of one node's background
+    execution — a runtime kernel error, an injected chaos fault, a corrupted
+    value — is absorbed at the iteration boundary (recorded + the node
+    quarantined with exponential backoff) and the loop continues.  Before
+    this boundary existed, the first such exception silently killed the
+    daemon thread and all think-time optimisation stopped forever, which is
+    strictly worse than never speculating."""
+
+    STOP_JOIN_TIMEOUT_S = 10.0
 
     def __init__(self, engine: Engine):
         self.engine = engine
@@ -491,16 +612,37 @@ class _BackgroundWorker:
         self._work.set()
         self._thread.start()
 
-    def stop(self) -> None:
+    def stop(self) -> bool:
+        """Stop the worker; returns False (and records a stall) if the thread
+        failed to exit within the join timeout — a wedged kernel dispatch."""
         self._stop.set()
         self._pause_req.set()
         self._work.set()
-        self._thread.join(timeout=10)
+        self._thread.join(timeout=self.STOP_JOIN_TIMEOUT_S)
+        if self._thread.is_alive():
+            self.engine.metrics.worker_stalls += 1
+            logger.warning(
+                "background worker failed to stop within %.0fs (stalled unit?)",
+                self.STOP_JOIN_TIMEOUT_S,
+            )
+            return False
+        return True
 
-    def pause(self) -> None:
+    def pause(self) -> bool:
+        """Request pause and wait for the ack (bounded: ~one unit duration).
+        A missed ack means a stalled unit is still holding the device; the
+        interaction proceeds anyway, but the stall is surfaced instead of
+        silently swallowed."""
         self._pause_req.set()
-        # wait until the worker acknowledges (bounded: one unit duration)
-        self._paused.wait(timeout=60)
+        acked = self._paused.wait(timeout=self.engine.worker_ack_timeout_s)
+        if not acked:
+            self.engine.metrics.worker_stalls += 1
+            logger.warning(
+                "background worker missed pause ack within %.0fs "
+                "(stalled unit still running)",
+                self.engine.worker_ack_timeout_s,
+            )
+        return acked
 
     def resume(self) -> None:
         self._pause_req.clear()
@@ -510,7 +652,15 @@ class _BackgroundWorker:
     def nudge(self) -> None:
         self._work.set()
 
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
     def _run(self) -> None:
+        with faults.background():
+            self._run_loop()
+
+    def _run_loop(self) -> None:
         eng = self.engine
         while not self._stop.is_set():
             if self._pause_req.is_set():
@@ -518,17 +668,20 @@ class _BackgroundWorker:
                 self._work.clear()
                 self._work.wait(timeout=0.5)
                 continue
-            with eng._lock:
-                node = eng.scheduler.pick(eng.cache.executed_ids())
-            if node is None:
-                self._paused.set()
-                self._work.clear()
-                self._work.wait(timeout=0.05)
-                self._paused.clear()
-                continue
+            node = None
             try:
                 with eng._lock:
-                    inputs = [eng.cache.get(p) for p in node.parents]
+                    node = eng.scheduler.pick(
+                        eng.cache.executed_ids(), now=eng.clock.now()
+                    )
+                if node is None:
+                    self._paused.set()
+                    self._work.clear()
+                    self._work.wait(timeout=0.05)
+                    self._paused.clear()
+                    continue
+                with eng._lock:
+                    inputs = eng._background_inputs(node)
                 t0 = time.monotonic()
                 value = eng.executor.execute(
                     node,
@@ -537,10 +690,22 @@ class _BackgroundWorker:
                     preempt_check=self._pause_req.is_set,
                     batch_budget_s=eng._batch_budget_s(),
                 )
+                if faults.is_corrupt(value):
+                    raise faults.CorruptResult(node.label)
                 with eng._lock:
                     eng.cache.put(node, value)
+                    eng.scheduler.clear_quarantine(node.nid)
                     eng.metrics.background_busy_s += time.monotonic() - t0
             except Preempted:
                 continue
             except KeyError:
                 continue  # input evicted between pick and fetch; re-pick
+            except Exception as exc:  # crash isolation: record, quarantine, go on
+                if node is None:
+                    # a scheduler/cache failure outside any node's fault
+                    # domain: log and keep serving (pick again next round)
+                    logger.exception("background scheduling failed; continuing")
+                    time.sleep(0.01)
+                    continue
+                with eng._lock:
+                    eng._absorb_background_fault(node, exc)

@@ -30,6 +30,9 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+from . import faults
+from .faults import CorruptResult
+
 
 class Preempted(Exception):
     """Raised when background execution yields to an interaction."""
@@ -164,10 +167,11 @@ class Executor:
     with the observed duration.
     """
 
-    def __init__(self, registry: Registry, clock, cost_model):
+    def __init__(self, registry: Registry, clock, cost_model, fault_plan=None):
         self.registry = registry
         self.clock = clock
         self.cost_model = cost_model
+        self.fault_plan = fault_plan
         self.stats = ExecStats()
 
     def execute(
@@ -189,7 +193,28 @@ class Executor:
         it — fuse up to k units per dispatch, sized so one batch's estimated
         duration stays within the budget (an arriving interaction loses at
         most one batch).  ``None`` disables batching (unit-at-a-time).
+
+        The engine's fault plan (if any) is scoped around execution so the
+        frame backend's kernel-dispatch site sees it; the ``exec.unit`` site
+        fires here, around each unit/batch.  May raise
+        :class:`~repro.core.faults.InjectedFault` or
+        :class:`~repro.core.faults.CorruptResult` — the background boundaries
+        quarantine on those; the foreground path never has them injected.
         """
+        with faults.scope(self.fault_plan):
+            return self._execute(
+                node, inputs, partials, preempt_check, budget_s, batch_budget_s
+            )
+
+    def _execute(
+        self,
+        node,
+        inputs: Sequence[Any],
+        partials: Dict[int, PartialProgress],
+        preempt_check: Optional[Callable[[], bool]],
+        budget_s: Optional[float],
+        batch_budget_s: Optional[float],
+    ) -> Any:
         impl = self.registry[node.op]
         units = impl.units(node, inputs)
         prog = partials.get(node.nid)
@@ -223,7 +248,10 @@ class Executor:
                     self.stats.units_preempted_lost += 1
                     raise Preempted(node.label)
             t0 = time.monotonic()
+            mode = faults.fire("exec.unit", op=node.op)  # may raise / sleep
             result = unit.fn()
+            if mode == "corrupt":
+                result = faults.corrupt(result)
             wall = time.monotonic() - t0
             dur = unit.cost_s if self.clock.virtual else wall
             self.clock.advance(unit.cost_s)
@@ -231,6 +259,7 @@ class Executor:
             prog.results[i] = result
             self.stats.units_run += 1
 
+        self._purge_corrupt(node, prog)
         if impl.combine_cost is not None:
             c = impl.combine_cost(node, inputs)
             self.clock.advance(c)
@@ -242,6 +271,21 @@ class Executor:
         self.stats.nodes_completed += 1
         partials.pop(node.nid, None)
         return value
+
+    @staticmethod
+    def _purge_corrupt(node, prog: PartialProgress) -> None:
+        """Integrity boundary before combine: a corrupted unit result must
+        never flow into a combined value.  Corrupt slots are dropped (so a
+        retry — background after backoff, or the interactive foreground path —
+        recomputes exactly the poisoned units) and the failure surfaces as
+        :class:`CorruptResult` for the fault boundaries to quarantine on."""
+        bad = [i for i, r in prog.results.items() if faults.is_corrupt(r)]
+        if bad:
+            for i in bad:
+                prog.results.pop(i, None)
+            raise CorruptResult(
+                f"{node.label}: {len(bad)} corrupted unit result(s) detected"
+            )
 
     # hard batch-size ceiling: cost estimates can be stale by orders of
     # magnitude before calibration, and one mis-sized mega-batch both blows
@@ -295,6 +339,12 @@ class Executor:
             if len(batch) > 1:
                 self.stats.units_batched += len(batch)
 
+        def finish(batch: UnitBatch, handle: Any, mode: Optional[str]) -> None:
+            results = batch.finalize(handle)
+            if mode == "corrupt":
+                results = [faults.corrupt(r) for r in results]
+            fill(batch, results)
+
         if self.clock.virtual:
             for batch in batches:
                 if any(i in prog.results for i in batch.indices):
@@ -307,7 +357,8 @@ class Executor:
                     # the whole batch straddles the arrival: one batch lost
                     self.stats.units_preempted_lost += len(batch)
                     raise Preempted(node.label)
-                fill(batch, batch.finalize(batch.dispatch()))
+                mode = faults.fire("exec.unit", op=node.op)  # may raise / sleep
+                finish(batch, batch.dispatch(), mode)
                 self.clock.advance(batch.cost_s)
                 spent += batch.cost_s
             return spent
@@ -316,23 +367,21 @@ class Executor:
         # dispatch→finalize spans, which overlap under pipelining and would
         # double-count device compute (inflating observe() ~2x)
         t_loop = time.monotonic()
-        inflight: Optional[tuple] = None  # (batch, handle)
+        inflight: Optional[tuple] = None  # (batch, handle, fault_mode)
         try:
             for batch in batches:
                 if preempt_check is not None and preempt_check():
                     raise Preempted(node.label)
+                mode = faults.fire("exec.unit", op=node.op)  # may raise / sleep
                 handle = batch.dispatch()
                 if inflight is not None:
-                    pb, ph = inflight
-                    fill(pb, pb.finalize(ph))
-                inflight = (batch, handle)
+                    finish(*inflight)
+                inflight = (batch, handle, mode)
             if inflight is not None:
-                pb, ph = inflight
-                fill(pb, pb.finalize(ph))
+                finish(*inflight)
                 inflight = None
             return time.monotonic() - t_loop
         except Preempted:
             if inflight is not None:  # harvest the dispatched batch
-                pb, ph = inflight
-                fill(pb, pb.finalize(ph))
+                finish(*inflight)
             raise

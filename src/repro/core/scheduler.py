@@ -15,9 +15,10 @@ ablation benchmark (EXPERIMENTS.md §Ablations).
 """
 from __future__ import annotations
 
+import math
 import random as _random
 from dataclasses import dataclass, field
-from typing import Callable, Iterable, Optional, Sequence, Set
+from typing import Callable, Dict, Iterable, Optional, Sequence, Set
 
 from .costmodel import CostModel
 from .dag import DAG, Node
@@ -25,6 +26,19 @@ from .predictor import InteractionPredictor
 from .slicing import source_operators
 
 Policy = str  # "utility" | "utility_p" | "fifo" | "lifo" | "random" | "cheapest"
+
+
+@dataclass
+class QuarantineEntry:
+    """Fault-domain state for one node whose background execution failed.
+
+    Each failure doubles the backoff; after ``Scheduler.quarantine_max_failures``
+    the node is quarantined permanently (``until = inf``) and only the
+    interactive foreground path will ever compute it again."""
+
+    failures: int = 0
+    until: float = -math.inf
+    last_error: str = ""
 
 
 @dataclass
@@ -40,6 +54,15 @@ class Scheduler:
     # demand (an unexecuted descendant) — otherwise the background loop would
     # recompute-evict-recompute for the whole think window
     evicted_once: Set[int] = field(default_factory=set)
+    # fault domains: background execution of these nodes failed; they are
+    # skipped by pick() until their exponential backoff expires (permanently
+    # after quarantine_max_failures).  Quarantine is a *post-filter* over the
+    # enumerated sources — it never touches the delta-maintained memos, so
+    # plans over non-quarantined state stay byte-identical to the brute-force
+    # oracle (the PR-3 invariant).
+    quarantine_base_s: float = 0.5
+    quarantine_max_failures: int = 5
+    quarantined: Dict[int, QuarantineEntry] = field(default_factory=dict)
     _rng: _random.Random = field(init=False)
 
     def __post_init__(self) -> None:
@@ -192,9 +215,49 @@ class Scheduler:
             out.append(n)
         return out
 
-    def pick(self, executed: Iterable[int]) -> Optional[Node]:
+    # -- quarantine (fault domains) ------------------------------------------------
+    def quarantine(self, nid: int, now: float, error: str = "") -> QuarantineEntry:
+        """Record a background failure of ``nid``: exponential backoff, then
+        permanent quarantine after ``quarantine_max_failures`` failures."""
+        entry = self.quarantined.get(nid)
+        if entry is None:
+            entry = self.quarantined[nid] = QuarantineEntry()
+        entry.failures += 1
+        entry.last_error = error
+        if entry.failures >= self.quarantine_max_failures:
+            entry.until = math.inf
+        else:
+            entry.until = now + self.quarantine_base_s * (2 ** (entry.failures - 1))
+        return entry
+
+    def clear_quarantine(self, nid: int) -> None:
+        """A successful execution ends the node's quarantine history."""
+        self.quarantined.pop(nid, None)
+
+    def is_quarantined(self, nid: int, now: Optional[float] = None) -> bool:
+        """Active quarantine verdict.  With ``now=None`` (legacy call sites)
+        only permanent quarantines hold; timed backoffs need the caller's
+        clock to expire against."""
+        entry = self.quarantined.get(nid)
+        if entry is None:
+            return False
+        if math.isinf(entry.until):
+            return True
+        return now is not None and now < entry.until
+
+    def quarantine_summary(self) -> dict:
+        return {
+            nid: {"failures": e.failures, "until": e.until, "error": e.last_error}
+            for nid, e in sorted(self.quarantined.items())
+        }
+
+    def pick(
+        self, executed: Iterable[int], now: Optional[float] = None
+    ) -> Optional[Node]:
         done = frozenset(executed)
         srcs = self.sources(done)
+        if self.quarantined:
+            srcs = [n for n in srcs if not self.is_quarantined(n.nid, now)]
         if not srcs:
             return None
         if self.policy == "fifo":
@@ -220,7 +283,9 @@ class Scheduler:
             done.add(nxt.nid)
 
     # -- self-check oracle ---------------------------------------------------------
-    def reference_pick(self, executed: Iterable[int]) -> Optional[Node]:
+    def reference_pick(
+        self, executed: Iterable[int], now: Optional[float] = None
+    ) -> Optional[Node]:
         """Brute-force, memo-free re-derivation of ``pick()`` under the
         "utility" policy: walks the DAG and the cost model directly on every
         call.  This is the oracle the delta-maintained memos are verified
@@ -234,6 +299,8 @@ class Scheduler:
                 for d in self.dag.descendants(n, include_self=True)
                 if d.nid != n.nid
             ):
+                continue
+            if self.is_quarantined(n.nid, now):
                 continue
             srcs.append(n)
         if not srcs:

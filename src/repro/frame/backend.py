@@ -38,18 +38,24 @@ relative, which the backend-parity tests pin down.
 """
 from __future__ import annotations
 
+import logging
 import os
+import threading
+import time
 from contextlib import contextmanager
-from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import faults as _faults
 from ..kernels import ops
 from . import blocking as B
 from .blocking import BUILTIN_AGGS, ColStats
 from .table import Column, Partition, PTable
+
+logger = logging.getLogger("repro.frame.backend")
 
 BACKENDS = ("numpy", "xla", "interpret", "pallas")
 ENV_VAR = "REPRO_FRAME_BACKEND"
@@ -108,6 +114,221 @@ def _kernel(backend: str):
     with foreground interactions, so a process-global save/restore would race
     (and could strand the global override in the wrong state)."""
     return ops.local_backend(backend)
+
+
+# --------------------------------------------------------------------------- #
+# runtime fault tolerance: per-(op, backend) circuit breakers                  #
+#                                                                              #
+# The eligibility gates above/below this module are *ahead-of-time* — they     #
+# route shapes a kernel cannot handle.  Kernels can also fail at RUN time      #
+# (XLA RESOURCE_EXHAUSTED, a lowering bug on a new shape, injected chaos       #
+# faults).  Every kernel call therefore goes through _guarded(): a runtime     #
+# exception falls back to the numpy reference for THAT dispatch, and repeated  #
+# failures trip a circuit breaker so subsequent dispatches skip the broken     #
+# kernel entirely until a half-open probe proves it healthy again.            #
+#                                                                              #
+#   closed ──(threshold consecutive failures)──▶ open                          #
+#   open ──(backoff elapsed; next dispatch is the probe)──▶ half-open          #
+#   half-open ──(probe succeeds)──▶ closed    ──(probe fails)──▶ open          #
+#                                                                              #
+# Breaker state is keyed (op-family, backend) and process-global — kernel      #
+# health is a property of the process (compiled executables, device state),    #
+# not of any one engine.                                                       #
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class _BreakerState:
+    state: str = "closed"  # "closed" | "open" | "half_open"
+    consecutive_failures: int = 0
+    opened_at: float = 0.0
+    open_count: int = 0  # times tripped (drives the exponential backoff)
+    failures: int = 0
+    successes: int = 0
+    fallbacks: int = 0  # dispatches served by numpy while not closed
+    last_error: str = ""
+
+
+class BreakerBoard:
+    """Thread-safe registry of per-(op, backend) circuit breakers."""
+
+    def __init__(
+        self,
+        failure_threshold: int = 3,
+        backoff_s: float = 5.0,
+        backoff_max_s: float = 300.0,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.failure_threshold = failure_threshold
+        self.backoff_s = backoff_s
+        self.backoff_max_s = backoff_max_s
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._states: Dict[Tuple[str, str], _BreakerState] = {}
+
+    def _state(self, op: str, bk: str) -> _BreakerState:
+        st = self._states.get((op, bk))
+        if st is None:
+            st = self._states[(op, bk)] = _BreakerState()
+        return st
+
+    def _backoff(self, st: _BreakerState) -> float:
+        return min(self.backoff_s * (2 ** max(st.open_count - 1, 0)), self.backoff_max_s)
+
+    def allow(self, op: str, bk: str) -> bool:
+        """May this dispatch try the kernel?  An open breaker whose backoff
+        has elapsed transitions to half-open and admits exactly this call as
+        the recovery probe; further calls are refused until the probe's
+        verdict arrives."""
+        with self._lock:
+            st = self._state(op, bk)
+            if st.state == "closed":
+                return True
+            if st.state == "open" and (
+                self.clock() - st.opened_at >= self._backoff(st)
+            ):
+                st.state = "half_open"
+                return True  # this dispatch is the probe
+            st.fallbacks += 1
+            return False
+
+    def record_success(self, op: str, bk: str) -> None:
+        with self._lock:
+            st = self._state(op, bk)
+            if st.state == "half_open":
+                logger.info("breaker (%s, %s) closed: probe succeeded", op, bk)
+            st.state = "closed"
+            st.consecutive_failures = 0
+            st.successes += 1
+
+    def record_failure(self, op: str, bk: str, error: str = "") -> None:
+        with self._lock:
+            st = self._state(op, bk)
+            st.failures += 1
+            st.consecutive_failures += 1
+            st.last_error = error[:200]
+            if st.state == "half_open" or (
+                st.state == "closed"
+                and st.consecutive_failures >= self.failure_threshold
+            ):
+                st.state = "open"
+                st.opened_at = self.clock()
+                st.open_count += 1
+                logger.warning(
+                    "breaker (%s, %s) OPEN after %d consecutive failure(s); "
+                    "numpy fallback for %.1fs (%s)",
+                    op, bk, st.consecutive_failures, self._backoff(st), error,
+                )
+
+    def is_closed(self, op: str, bk: str) -> bool:
+        """Read-only planning gate (no probe grant, no fallback counting):
+        batch planners decline fusion while a breaker is not closed, pushing
+        units through the per-partition paths where _guarded handles the
+        fallback — and the half-open recovery probe — one dispatch at a time."""
+        with self._lock:
+            return self._state(op, bk).state == "closed"
+
+    def snapshot(self) -> Dict[str, dict]:
+        with self._lock:
+            return {
+                f"{op}|{bk}": {
+                    "state": st.state,
+                    "failures": st.failures,
+                    "successes": st.successes,
+                    "fallbacks": st.fallbacks,
+                    "open_count": st.open_count,
+                    "last_error": st.last_error,
+                }
+                for (op, bk), st in sorted(self._states.items())
+            }
+
+    def reset(self) -> None:
+        with self._lock:
+            self._states.clear()
+
+
+_BOARD = BreakerBoard()
+
+
+def breaker_board() -> BreakerBoard:
+    return _BOARD
+
+
+def reset_breakers() -> None:
+    """Clear all breaker state (tests / between benchmark phases)."""
+    _BOARD.reset()
+
+
+# the backend that actually served the current unit's dispatch — consumed by
+# the frame runtime so calibration samples (and the bench JSON built from
+# them) attribute time to the path that really ran, not the one requested
+_SERVED = threading.local()
+
+
+def note_reset() -> None:
+    _SERVED.backend = None
+    _SERVED.reason = None
+
+
+def served_backend(default: str) -> Tuple[str, Optional[str]]:
+    """(backend that served the last guarded dispatch, fallback reason)."""
+    return (
+        getattr(_SERVED, "backend", None) or default,
+        getattr(_SERVED, "reason", None),
+    )
+
+
+def _note(bk: str, reason: Optional[str]) -> None:
+    _SERVED.backend = bk
+    _SERVED.reason = reason
+
+
+def _guarded(op: str, bk: str, kernel_fn: Callable[[], Any],
+             fallback_fn: Callable[[], Any]) -> Any:
+    """Runtime dispatch guard: breaker gate → fault injection → kernel call;
+    ANY runtime exception is absorbed into a numpy fallback for this dispatch
+    and scored against the (op, backend) breaker.  The foreground interactive
+    path rides the same guard, which is what makes user-visible results
+    immune to kernel runtime failures."""
+    if not _BOARD.allow(op, bk):
+        _note("numpy", "breaker_open")
+        return fallback_fn()
+    try:
+        mode = _faults.fire("kernel", op=op)  # chaos: may raise / sleep
+        if mode == "corrupt":
+            # model: the kernel returned garbage and validation caught it
+            raise _faults.InjectedFault(f"corrupted kernel output at {op}")
+        out = kernel_fn()
+    except Exception as exc:
+        _BOARD.record_failure(op, bk, error=f"{type(exc).__name__}: {exc}")
+        _note("numpy", "runtime_error")
+        logger.warning(
+            "kernel dispatch (%s, %s) failed at run time (%s: %s); "
+            "numpy fallback for this dispatch",
+            op, bk, type(exc).__name__, exc,
+        )
+        return fallback_fn()
+    _BOARD.record_success(op, bk)
+    _note(bk, None)
+    return out
+
+
+@contextmanager
+def _breaker_watch(op: str, bk: str):
+    """Batched dispatches don't fall back per-call (the whole batch raises to
+    the executor, whose fault boundary quarantines the node) — but their
+    failures must still score the breaker so subsequent planning declines the
+    broken kernel.  Fires the kernel chaos site on entry, like _guarded."""
+    mode = _faults.fire("kernel", op=op)  # may raise — counted below
+    try:
+        if mode == "corrupt":
+            raise _faults.InjectedFault(f"corrupted kernel output at {op}")
+        yield
+    except Exception as exc:
+        _BOARD.record_failure(op, bk, error=f"{type(exc).__name__}: {exc}")
+        raise
+    else:
+        _BOARD.record_success(op, bk)
 
 
 # --------------------------------------------------------------------------- #
@@ -214,10 +435,14 @@ def partial_stats(
     names = list(cols) if cols is not None else B.numeric_columns(part)
     if bk == "numpy" or not names or part.nrows == 0:
         return B.partial_stats(part, cols)
-    xs, ms = _dev_stats_stack(part, names)
-    with _kernel(bk):
-        raw = np.asarray(ops.masked_stats_batch(xs, ms), np.float64)
-    return _stats_from_raw(names, raw)
+
+    def _run():
+        xs, ms = _dev_stats_stack(part, names)
+        with _kernel(bk):
+            raw = np.asarray(ops.masked_stats_batch(xs, ms), np.float64)
+        return _stats_from_raw(names, raw)
+
+    return _guarded("stats", bk, _run, lambda: B.partial_stats(part, cols))
 
 
 # --------------------------------------------------------------------------- #
@@ -312,12 +537,20 @@ def partial_groupby(
         return B.partial_groupby(part, by, aggs, topk_keys)
     key_col = part.columns[by]
     nb = len(key_col.dictionary)
-    keys, values, valids, modes, valid_idx, agg_plan = _groupby_plan(part, by, aggs)
-    with _kernel(bk):
-        reds, cnts = ops.segment_reduce_batch(
-            keys, values, valids, nb, modes, valid_idx
+
+    def _run():
+        keys, values, valids, modes, valid_idx, agg_plan = _groupby_plan(
+            part, by, aggs
         )
-    return _groupby_from_raw(key_col.data.dtype, agg_plan, reds, cnts)
+        with _kernel(bk):
+            reds, cnts = ops.segment_reduce_batch(
+                keys, values, valids, nb, modes, valid_idx
+            )
+        return _groupby_from_raw(key_col.data.dtype, agg_plan, reds, cnts)
+
+    return _guarded(
+        "groupby", bk, _run, lambda: B.partial_groupby(part, by, aggs, topk_keys)
+    )
 
 
 def _vc_from_raw(key_dtype, cnt_row: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -334,11 +567,17 @@ def partial_value_counts(
     c = part.columns[col]
     if bk == "numpy" or c.dictionary is None or part.nrows == 0:
         return B.partial_value_counts(part, col)
-    with _kernel(bk):
-        _, cnts = ops.segment_reduce_batch(
-            _dev_i32(c), [], [_dev_valid(c)], len(c.dictionary), [], []
-        )
-    return _vc_from_raw(c.data.dtype, np.asarray(cnts)[0])
+
+    def _run():
+        with _kernel(bk):
+            _, cnts = ops.segment_reduce_batch(
+                _dev_i32(c), [], [_dev_valid(c)], len(c.dictionary), [], []
+            )
+        return _vc_from_raw(c.data.dtype, np.asarray(cnts)[0])
+
+    return _guarded(
+        "value_counts", bk, _run, lambda: B.partial_value_counts(part, col)
+    )
 
 
 # --------------------------------------------------------------------------- #
@@ -424,9 +663,15 @@ def _partial_sort_full(
     keys = _sort_keys(key_col, ascending)
     if not _sort_keys_exact(keys):
         return B.partial_sort(part, by, ascending, None, n_samples)
-    with _kernel(bk):
-        order = np.asarray(ops.argsort_f64(keys if ascending else -keys))
-    return _sorted_result(part, keys, order, n_samples)
+
+    def _run():
+        with _kernel(bk):
+            order = np.asarray(ops.argsort_f64(keys if ascending else -keys))
+        return _sorted_result(part, keys, order, n_samples)
+
+    return _guarded(
+        "sort", bk, _run, lambda: B.partial_sort(part, by, ascending, None, n_samples)
+    )
 
 
 def _partial_sort_limit(
@@ -447,9 +692,15 @@ def _partial_sort_limit(
         # dropping valid rows — numpy's argsort-NaN-last semantics instead
         return B.partial_sort(part, by, ascending, limit, n_samples)
     kf32 = keys.astype(np.float32)
-    with _kernel(bk):
-        winners = np.asarray(ops.topk_padded(kf32, limit, largest=not ascending))
-    return _limit_select(part, keys, kf32, winners, ascending, limit, n_samples)
+
+    def _run():
+        with _kernel(bk):
+            winners = np.asarray(ops.topk_padded(kf32, limit, largest=not ascending))
+        return _limit_select(part, keys, kf32, winners, ascending, limit, n_samples)
+
+    return _guarded(
+        "topk", bk, _run, lambda: B.partial_sort(part, by, ascending, limit, n_samples)
+    )
 
 
 def _limit_select(
@@ -508,23 +759,29 @@ def merge_sort(
     nparts = len(parts)
     pivots = sall[np.linspace(0, len(sall) - 1, nparts + 1).astype(int)[1:-1]]
     splits = [np.searchsorted(k, pivots, side="left") for k in keys]
-    out_parts: List[Partition] = []
-    for r in range(nparts):
-        slices: List[Partition] = []
-        skeys: List[np.ndarray] = []
-        for p, k, sp in zip(parts, keys, splits):
-            a = int(sp[r - 1]) if r > 0 else 0
-            b = int(sp[r]) if r < nparts - 1 else p.nrows
-            if b > a:
-                slices.append(p.slice(a, b))
-                skeys.append(k[a:b])
-        if not slices:
-            continue
-        chunk = PTable(slices).concat()
-        with _kernel(bk):
-            order = np.asarray(ops.argsort_f64(np.concatenate(skeys)))
-        out_parts.append(chunk.take(order))
-    return PTable(out_parts or [parts[0].slice(0, 0)])
+
+    def _run():
+        out_parts: List[Partition] = []
+        for r in range(nparts):
+            slices: List[Partition] = []
+            skeys: List[np.ndarray] = []
+            for p, k, sp in zip(parts, keys, splits):
+                a = int(sp[r - 1]) if r > 0 else 0
+                b = int(sp[r]) if r < nparts - 1 else p.nrows
+                if b > a:
+                    slices.append(p.slice(a, b))
+                    skeys.append(k[a:b])
+            if not slices:
+                continue
+            chunk = PTable(slices).concat()
+            with _kernel(bk):
+                order = np.asarray(ops.argsort_f64(np.concatenate(skeys)))
+            out_parts.append(chunk.take(order))
+        return PTable(out_parts or [parts[0].slice(0, 0)])
+
+    return _guarded(
+        "merge_sort", bk, _run, lambda: B.merge_sort(partials, by, ascending, limit)
+    )
 
 
 # --------------------------------------------------------------------------- #
@@ -604,14 +861,22 @@ def join_partition(
     if len(r_sorted) == 0:
         hit = np.zeros(left.nrows, dtype=bool)
         gather = np.zeros(left.nrows, dtype=np.intp)
-    else:
+        if lcol.mask is not None:
+            hit = hit & np.asarray(lcol.mask)
+        return B.join_assemble(left, rmerged, gather, hit, how, on)
+
+    def _run():
         with _kernel(bk):
-            pos, hit = ops.join_probe_padded(r_dev, _dev_f32(lcol))
-        hit = np.asarray(hit)
+            pos, hit_dev = ops.join_probe_padded(r_dev, _dev_f32(lcol))
+        hit = np.asarray(hit_dev)
         gather = r_order[np.asarray(pos)]
-    if lcol.mask is not None:
-        hit = hit & np.asarray(lcol.mask)  # null left keys never match
-    return B.join_assemble(left, rmerged, gather, hit, how, on)
+        if lcol.mask is not None:
+            hit = hit & np.asarray(lcol.mask)  # null left keys never match
+        return B.join_assemble(left, rmerged, gather, hit, how, on)
+
+    return _guarded(
+        "join", bk, _run, lambda: B.join_partition(left, right, on, how)
+    )
 
 
 # --------------------------------------------------------------------------- #
@@ -666,6 +931,8 @@ def plan_stats_batch(
     bk = active_backend(backend)
     if bk == "numpy" or not parts or not _same_bucket(parts):
         return None
+    if not _BOARD.is_closed("stats", bk):
+        return None  # units fall back one at a time through _guarded
     names = list(cols) if cols is not None else B.numeric_columns(parts[0])
     if not names:
         return None
@@ -676,11 +943,12 @@ def plan_stats_batch(
     C = len(names)
 
     def dispatch():
-        stacks = [_dev_stats_stack(p, names) for p in parts]
-        with _kernel(bk):
-            return ops.masked_stats_batch_parts(
-                [xs for xs, _ in stacks], [ms for _, ms in stacks]
-            )
+        with _breaker_watch("stats", bk):
+            stacks = [_dev_stats_stack(p, names) for p in parts]
+            with _kernel(bk):
+                return ops.masked_stats_batch_parts(
+                    [xs for xs, _ in stacks], [ms for _, ms in stacks]
+                )
 
     def finalize(raw):
         raw = np.asarray(raw, np.float64)
@@ -702,6 +970,8 @@ def plan_groupby_batch(
     bk = active_backend(backend)
     if bk == "numpy" or not parts or not _same_bucket(parts):
         return None
+    if not _BOARD.is_closed("groupby", bk):
+        return None
     if any(not _groupby_supported(p, by, aggs, topk_keys) for p in parts):
         return None
     nb = len(parts[0].columns[by].dictionary)
@@ -717,13 +987,14 @@ def plan_groupby_batch(
             return None
 
     def dispatch():
-        with _kernel(bk):
-            return ops.segment_reduce_batch_parts(
-                [pl[0] for pl in plans],
-                [pl[1] for pl in plans],
-                [pl[2] for pl in plans],
-                nb, modes0, vidx0,
-            )
+        with _breaker_watch("groupby", bk):
+            with _kernel(bk):
+                return ops.segment_reduce_batch_parts(
+                    [pl[0] for pl in plans],
+                    [pl[1] for pl in plans],
+                    [pl[2] for pl in plans],
+                    nb, modes0, vidx0,
+                )
 
     def finalize(handle):
         reds, cnts = handle
@@ -745,18 +1016,21 @@ def plan_value_counts_batch(
     bk = active_backend(backend)
     if bk == "numpy" or not parts or not _same_bucket(parts):
         return None
+    if not _BOARD.is_closed("value_counts", bk):
+        return None
     if any(p.columns[col].dictionary is None or p.nrows == 0 for p in parts):
         return None
     nb = len(parts[0].columns[col].dictionary)
 
     def dispatch():
-        with _kernel(bk):
-            return ops.segment_reduce_batch_parts(
-                [_dev_i32(p.columns[col]) for p in parts],
-                [[] for _ in parts],
-                [[_dev_valid(p.columns[col])] for p in parts],
-                nb, [], [],
-            )
+        with _breaker_watch("value_counts", bk):
+            with _kernel(bk):
+                return ops.segment_reduce_batch_parts(
+                    [_dev_i32(p.columns[col]) for p in parts],
+                    [[] for _ in parts],
+                    [[_dev_valid(p.columns[col])] for p in parts],
+                    nb, [], [],
+                )
 
     def finalize(handle):
         _, cnts = handle
@@ -783,15 +1057,18 @@ def plan_sort_batch(
     if any(p.columns.get(by) is None or p.nrows == 0 for p in parts):
         return None
     if limit is None:
+        if not _BOARD.is_closed("sort", bk):
+            return None
         keys_list = [_sort_keys(p.columns[by], ascending) for p in parts]
         if not all(_sort_keys_exact(k) for k in keys_list):
             return None
 
         def dispatch():
-            with _kernel(bk):
-                return ops.argsort_f64_parts(
-                    [k if ascending else -k for k in keys_list]
-                )
+            with _breaker_watch("sort", bk):
+                with _kernel(bk):
+                    return ops.argsort_f64_parts(
+                        [k if ascending else -k for k in keys_list]
+                    )
 
         def finalize(handle):
             orders = np.asarray(handle)
@@ -806,6 +1083,8 @@ def plan_sort_batch(
 
     if not (1 <= limit <= TOPK_MAX_K):
         return None
+    if not _BOARD.is_closed("topk", bk):
+        return None
     if any(
         p.columns[by].is_string or p.nrows <= limit for p in parts
     ):
@@ -816,8 +1095,9 @@ def plan_sort_batch(
     kf32s = [k.astype(np.float32) for k in keys_list]
 
     def dispatch():
-        with _kernel(bk):
-            return ops.topk_padded_parts(kf32s, limit, largest=not ascending)
+        with _breaker_watch("topk", bk):
+            with _kernel(bk):
+                return ops.topk_padded_parts(kf32s, limit, largest=not ascending)
 
     def finalize(handle):
         winners = np.asarray(handle)
@@ -844,32 +1124,35 @@ def plan_select_rows_batch(
     bk = active_backend(backend)
     if bk == "numpy" or not parts or not _same_bucket(parts):
         return None
+    if not _BOARD.is_closed("filter", bk):
+        return None
     if any(p.nrows == 0 for p in parts):
         return None
 
     def dispatch():
-        keeps = [np.asarray(k, bool) for k in keeps_fn()]
-        xs_rows: list = []
-        keeps_rows: list = []
-        row_of: Dict[Tuple[int, str, str], int] = {}
-        for i, (p, keep) in enumerate(zip(parts, keeps)):
-            keep_dev = jnp.asarray(keep)
-            for name in p.order:
-                c = p.columns[name]
-                if not _compact_lossless(c):
-                    continue
-                row_of[(i, name, "data")] = len(xs_rows)
-                xs_rows.append(_dev_f32(c))
-                keeps_rows.append(keep_dev)
-                if c.mask is not None:
-                    row_of[(i, name, "mask")] = len(xs_rows)
-                    xs_rows.append(jnp.asarray(c.mask).astype(jnp.float32))
+        with _breaker_watch("filter", bk):
+            keeps = [np.asarray(k, bool) for k in keeps_fn()]
+            xs_rows: list = []
+            keeps_rows: list = []
+            row_of: Dict[Tuple[int, str, str], int] = {}
+            for i, (p, keep) in enumerate(zip(parts, keeps)):
+                keep_dev = jnp.asarray(keep)
+                for name in p.order:
+                    c = p.columns[name]
+                    if not _compact_lossless(c):
+                        continue
+                    row_of[(i, name, "data")] = len(xs_rows)
+                    xs_rows.append(_dev_f32(c))
                     keeps_rows.append(keep_dev)
-        out = None
-        if xs_rows:
-            with _kernel(bk):
-                out, _ = ops.filter_compact_padded_parts(xs_rows, keeps_rows)
-        return keeps, row_of, out
+                    if c.mask is not None:
+                        row_of[(i, name, "mask")] = len(xs_rows)
+                        xs_rows.append(jnp.asarray(c.mask).astype(jnp.float32))
+                        keeps_rows.append(keep_dev)
+            out = None
+            if xs_rows:
+                with _kernel(bk):
+                    out, _ = ops.filter_compact_padded_parts(xs_rows, keeps_rows)
+            return keeps, row_of, out
 
     def finalize(handle):
         keeps, row_of, out = handle
@@ -903,26 +1186,30 @@ def select_rows(
     keep = np.asarray(keep, bool)
     if bk == "numpy" or part.nrows == 0:
         return part.select_rows(keep)
-    count = int(keep.sum())
-    # upload + pad the keep mask once; column data rides the device cache
-    nb = ops.pad_len(part.nrows)
-    keep_dev = jnp.asarray(keep)
-    if nb != part.nrows:
-        keep_dev = jnp.pad(keep_dev, (0, nb - part.nrows), constant_values=False)
-    new_cols: Dict[str, Column] = {}
-    with _kernel(bk):
-        for name in part.order:
-            c = part.columns[name]
-            if not _compact_lossless(c):
-                new_cols[name] = c.select(keep)
-                continue
-            out, _ = ops.filter_compact_padded(_dev_f32(c), keep_dev)
-            data = np.asarray(out)[:count].astype(c.data.dtype)
-            mask = None
-            if c.mask is not None:
-                mout, _ = ops.filter_compact_padded(
-                    jnp.asarray(c.mask).astype(jnp.float32), keep_dev
-                )
-                mask = np.asarray(mout)[:count] > 0.5
-            new_cols[name] = Column(data=data, mask=mask, dictionary=c.dictionary)
-    return Partition(new_cols, list(part.order))
+
+    def _run():
+        count = int(keep.sum())
+        # upload + pad the keep mask once; column data rides the device cache
+        nb = ops.pad_len(part.nrows)
+        keep_dev = jnp.asarray(keep)
+        if nb != part.nrows:
+            keep_dev = jnp.pad(keep_dev, (0, nb - part.nrows), constant_values=False)
+        new_cols: Dict[str, Column] = {}
+        with _kernel(bk):
+            for name in part.order:
+                c = part.columns[name]
+                if not _compact_lossless(c):
+                    new_cols[name] = c.select(keep)
+                    continue
+                out, _ = ops.filter_compact_padded(_dev_f32(c), keep_dev)
+                data = np.asarray(out)[:count].astype(c.data.dtype)
+                mask = None
+                if c.mask is not None:
+                    mout, _ = ops.filter_compact_padded(
+                        jnp.asarray(c.mask).astype(jnp.float32), keep_dev
+                    )
+                    mask = np.asarray(mout)[:count] > 0.5
+                new_cols[name] = Column(data=data, mask=mask, dictionary=c.dictionary)
+        return Partition(new_cols, list(part.order))
+
+    return _guarded("filter", bk, _run, lambda: part.select_rows(keep))

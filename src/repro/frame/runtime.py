@@ -53,13 +53,20 @@ class FrameRuntime:
 
     def _timed(self, node: Node, rows: int, fn: Callable[[str], Any]) -> Callable[[], Any]:
         """Wrap a partial-unit body: resolve the backend at execution time,
-        measure wall time, and feed the sample to cost-model calibration."""
+        measure wall time, and feed the sample to cost-model calibration.
+        The sample is labelled with the backend that actually *served* the
+        dispatch — when the runtime guard falls back to numpy (kernel error,
+        open breaker) the time must calibrate the numpy path, or a single
+        kernel failure would permanently skew the kernel's fitted cost."""
 
         def run():
             bk = self.backend_policy.resolve()
+            BK.note_reset()
             t0 = time.perf_counter()
             out = fn(bk)
-            self.cost_model.add_sample(node.op, bk, rows, time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+            served, _reason = BK.served_backend(bk)
+            self.cost_model.add_sample(node.op, served, rows, dt)
             return out
 
         return run

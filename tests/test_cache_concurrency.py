@@ -1,0 +1,152 @@
+"""Concurrent MaterializedCache access under the engine-lock discipline.
+
+The cache itself is not thread-safe; the engine serialises every touch under
+``Engine._lock`` (interactive thread vs. real-mode background worker).  These
+tests hammer that discipline — including ``on_evict`` firing during GC in the
+middle of a background run — and pin down the accounting invariants that must
+survive arbitrary interleavings.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Engine, MaterializedCache, result_nbytes
+from repro.core.costmodel import CostModel
+from repro.core.dag import DAG
+from repro.frame import Session
+
+
+def _mk_cache(budget=10_000, **kw) -> MaterializedCache:
+    return MaterializedCache(budget_bytes=budget, cost_model=CostModel(), **kw)
+
+
+def _nodes(n):
+    dag = DAG()
+    out = [dag.add("synthetic", kwargs={"cost_s": 1.0, "tag": str(i)}) for i in range(n)]
+    return out
+
+
+def test_concurrent_put_get_drop_under_lock():
+    """Interleaved put/get/drop from four threads, engine-style (shared lock):
+    no exceptions, and the byte accounting stays exact."""
+    cache = _mk_cache(budget=50_000)
+    nodes = _nodes(32)
+    lock = threading.RLock()
+    errors = []
+    stop = threading.Event()
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(400):
+                node = nodes[int(rng.integers(len(nodes)))]
+                action = rng.random()
+                with lock:
+                    if action < 0.5:
+                        cache.put(node, np.arange(int(rng.integers(1, 200))))
+                    elif action < 0.8:
+                        try:
+                            cache.get(node)
+                        except KeyError:
+                            pass
+                    else:
+                        cache.drop(node.nid)
+        except Exception as exc:  # pragma: no cover - failure path
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    assert errors == []
+    with lock:
+        expected = sum(e.m_bytes for e in cache._entries.values())
+        assert cache.used_bytes == expected
+        assert cache.used_bytes <= cache.budget_bytes
+
+
+def test_on_evict_fires_during_gc_and_may_reenter_reads():
+    """GC triggered by a put invokes ``on_evict`` mid-operation; the callback
+    reads back into the cache (peek / executed_ids), exactly like the engine's
+    wiring into ``scheduler.evicted_once`` plus metrics — must not corrupt
+    accounting or deadlock."""
+    evicted = []
+    cache = _mk_cache(budget=2_000, gc_threshold=0.8)
+
+    def on_evict(node):
+        evicted.append(node.nid)
+        # re-entrant reads during eviction (engine-style introspection)
+        assert cache.peek(node.nid) is None  # entry already removed
+        cache.executed_ids()
+
+    cache.on_evict = on_evict
+    nodes = _nodes(10)
+    for i, node in enumerate(nodes):
+        cache.put(node, np.arange(100))  # 800 bytes each: forces GC
+    assert evicted  # GC actually ran
+    assert cache.used_bytes <= 0.8 * cache.budget_bytes
+    assert cache.used_bytes == sum(e.m_bytes for e in cache._entries.values())
+    # evicted entries are really gone
+    for nid in evicted:
+        assert nid not in cache
+
+
+def test_on_evict_during_gc_mid_background_run(catalog):
+    """Real-mode worker filling a tiny cache while the interactive thread
+    displays: GC (and the engine's on_evict → scheduler.evicted_once hook)
+    fires concurrently with interactions.  The worker must survive, results
+    must stay correct, and the accounting must balance at the end."""
+    s = Session(catalog=catalog, mode="real", budget_bytes=200_000)
+    eng = s.engine
+    df = s.read_table("small")
+    flt = df[df["x"] > 3.0]
+    srt = flt.sort_values("x")
+    desc = df.describe()
+    eng.start_background()
+    try:
+        deadline = time.time() + 20
+        while eng.cache.n_evictions == 0 and time.time() < deadline:
+            eng.nudge_background()
+            time.sleep(0.01)
+        out = s.show(srt.head(5))  # interactions race the GC'ing worker
+        assert out.nrows == 5
+        out2 = s.show(desc)
+        assert out2.nrows == 5
+        assert eng._worker.alive
+    finally:
+        eng.stop_background()
+    with eng._lock:
+        assert eng.cache.used_bytes == sum(
+            e.m_bytes for e in eng.cache._entries.values()
+        )
+    # eviction hook fed the scheduler's anti-thrash set for every eviction
+    if eng.cache.n_evictions:
+        assert eng.scheduler.evicted_once
+
+
+def test_gc_respects_pins_under_churn():
+    cache = _mk_cache(budget=1_000, gc_threshold=0.8)
+    nodes = _nodes(6)
+    cache.put(nodes[0], np.arange(50))  # 400 bytes
+    cache.pin(nodes[0].nid)
+    for node in nodes[1:]:
+        cache.put(node, np.arange(50))
+    assert nodes[0].nid in cache  # pinned entries survive any GC pressure
+    cache.unpin(nodes[0].nid)
+    cache.put(nodes[1], np.arange(80))
+    # after unpinning it is evictable again (may or may not be chosen)
+    assert cache.used_bytes == sum(e.m_bytes for e in cache._entries.values())
+
+
+def test_eviction_of_speculative_results_first():
+    cache = _mk_cache(budget=1_000, gc_threshold=0.8)
+    nodes = _nodes(3)
+    cache.put(nodes[0], np.arange(60), speculative=True)  # 480 bytes
+    cache.put(nodes[1], np.arange(40))  # 320 bytes → total 800 = threshold
+    cache.put(nodes[2], np.arange(20))  # 160 bytes → GC
+    assert nodes[0].nid not in cache  # speculative victim goes first
+    assert nodes[1].nid in cache
