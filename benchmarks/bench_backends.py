@@ -170,6 +170,23 @@ def run(nrows: int, interpret_nrows: int, warmup: int, repeats: int,
     return report
 
 
+def check_drift(report: dict, baseline_path: str, rel_tol: float) -> dict:
+    """Cost-model drift alert: compare this run's fitted unit costs against
+    the committed baseline's ``calibration_s_per_row`` and return the keys
+    whose cost moved more than ``rel_tol``× either way.  CI runs this on the
+    smoke fit with a generous tolerance — the target is calibration
+    *regressions* (a fit collapsing to the floor, a kernel going an order of
+    magnitude slower), not machine-to-machine noise."""
+    cm = CostModel()
+    for key, cost in report["calibration_s_per_row"].items():
+        op, _, bk = key.partition("|")
+        cm._backend_unit_cost[(op, bk)] = float(cost)
+    with open(baseline_path) as f:
+        baseline = json.load(f).get("calibration_s_per_row", {})
+    drift = cm.drift_report(baseline, rel_tol=rel_tol)
+    return {k: v for k, v in drift.items() if v["status"] == "drift"}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--nrows", type=int, default=1_000_000)
@@ -181,6 +198,11 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_backends.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-rows CI wiring check (no JSON written)")
+    ap.add_argument("--check-drift", metavar="BASELINE_JSON", default=None,
+                    help="fail if fitted unit costs drifted > --drift-tol x "
+                         "from the baseline's calibration_s_per_row")
+    ap.add_argument("--drift-tol", type=float, default=50.0,
+                    help="relative drift tolerance (either direction)")
     args = ap.parse_args()
     if args.smoke:
         report = run(20_000, 4_096, warmup=1, repeats=1)
@@ -188,6 +210,12 @@ def main() -> None:
         assert report["calibration_s_per_row"], "calibration produced no fits"
         print("SMOKE OK:", len(report["workloads"]), "workloads,",
               len(report["calibration_s_per_row"]), "fitted costs")
+        if args.check_drift:
+            drifted = check_drift(report, args.check_drift, args.drift_tol)
+            if drifted:
+                print("CALIBRATION DRIFT:", json.dumps(drifted, indent=2))
+                sys.exit(1)
+            print(f"DRIFT OK: within {args.drift_tol}x of {args.check_drift}")
         return
     report = run(args.nrows, args.interpret_nrows, args.warmup, args.repeats,
                  skip_interpret=args.skip_interpret)

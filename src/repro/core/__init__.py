@@ -13,7 +13,7 @@ Public surface:
 from .cache import MaterializedCache, result_nbytes
 from .clock import RealClock, VirtualClock
 from .costmodel import CostModel
-from .cse import merge_common_subexpressions
+from .cse import intern_program, merge_common_subexpressions
 from .dag import DAG, Node, DEFAULT_INTERACTION_OPS, PARAMETRIC_OPS
 from .engine import Engine, Metrics
 from .executor import OpRuntime, PartialProgress, Preempted, Registry, Unit
@@ -42,7 +42,7 @@ __all__ = [
     "Scheduler", "SpeculationManager", "ThinkTimeModel", "InteractionPredictor",
     "RealClock", "VirtualClock", "critical_path", "non_critical",
     "source_operators", "unexecuted_critical", "count_non_critical_before",
-    "merge_common_subexpressions", "result_nbytes",
+    "merge_common_subexpressions", "intern_program", "result_nbytes",
     "DEFAULT_INTERACTION_OPS", "PARAMETRIC_OPS",
     "FaultPlan", "FaultSpec", "InjectedFault", "InjectedResourceExhausted",
     "CorruptResult",

@@ -49,6 +49,11 @@ class CacheEntry:
     t_last_use: int
     pinned: int = 0
     speculative: bool = False
+    # multi-tenant serving: the tenants whose programs reference this node.
+    # A shared (deduped) entry charges its full size against *each*
+    # subscriber's share — conservative, and it keeps the per-tenant byte
+    # accounting integral.  Empty = untenanted (single-tenant engine).
+    tenants: set = field(default_factory=set)
 
 
 @dataclass
@@ -68,6 +73,14 @@ class MaterializedCache:
     n_evictions: int = 0
     n_hits: int = 0
     n_misses: int = 0
+    # -- multi-tenant fairness state -------------------------------------------
+    # node id -> subscribing tenants, maintained by the serving layer as
+    # programs are interned; consulted at put() time so entries are charged
+    # without threading a tenant through every execution path.
+    node_tenants: Dict[int, set] = field(default_factory=dict)
+    # tenant -> charged bytes (full entry size per subscriber, see CacheEntry)
+    _tenant_bytes: Dict[str, int] = field(default_factory=dict)
+    n_fairness_evictions: int = 0  # victims chosen by the fair-share rule
 
     # -- basic ops -----------------------------------------------------------------
     def __contains__(self, nid: int) -> bool:
@@ -108,21 +121,70 @@ class MaterializedCache:
                 value = _faults.corrupt(value)
         m = result_nbytes(value)
         old = self._entries.pop(node.nid, None)
+        subscribers = set(self.node_tenants.get(node.nid, ()))
         if old is not None:
             self.used_bytes -= old.m_bytes
-        self._entries[node.nid] = CacheEntry(
+            self._uncharge(old)
+            subscribers |= old.tenants  # a refresh must not shed subscribers
+        entry = CacheEntry(
             node=node, value=value, m_bytes=m, t_last_use=self._T,
-            speculative=speculative,
+            speculative=speculative, tenants=subscribers,
         )
+        self._entries[node.nid] = entry
         self.used_bytes += m
+        self._charge(entry)
         self.maybe_gc()
 
     def drop(self, nid: int) -> None:
         e = self._entries.pop(nid, None)
         if e is not None:
             self.used_bytes -= e.m_bytes
+            self._uncharge(e)
             if self.on_evict is not None:
                 self.on_evict(e.node)
+
+    # -- multi-tenant fairness ---------------------------------------------------
+    def _charge(self, entry: CacheEntry) -> None:
+        for t in entry.tenants:
+            self._tenant_bytes[t] = self._tenant_bytes.get(t, 0) + entry.m_bytes
+
+    def _uncharge(self, entry: CacheEntry) -> None:
+        for t in entry.tenants:
+            self._tenant_bytes[t] = self._tenant_bytes.get(t, 0) - entry.m_bytes
+
+    def register_tenant(self, tenant: str) -> None:
+        """Make ``tenant`` count towards the fair-share denominator (idempotent)."""
+        self._tenant_bytes.setdefault(tenant, 0)
+
+    def subscribe(self, nid: int, tenant: str) -> None:
+        """Subscribe ``tenant`` to node ``nid`` (dedup: a second tenant's
+        identical query points at the same materialisation).  Charges the
+        tenant for an already-cached entry immediately; future put()s pick the
+        subscription up from :attr:`node_tenants`."""
+        self.register_tenant(tenant)
+        self.node_tenants.setdefault(nid, set()).add(tenant)
+        e = self._entries.get(nid)
+        if e is not None and tenant not in e.tenants:
+            e.tenants.add(tenant)
+            self._tenant_bytes[tenant] += e.m_bytes
+
+    def tenant_bytes(self, tenant: str) -> int:
+        return self._tenant_bytes.get(tenant, 0)
+
+    def fair_share(self) -> float:
+        """Per-tenant slice of the memory budget (equal split)."""
+        return self.budget_bytes / max(1, len(self._tenant_bytes))
+
+    def over_share(self) -> set:
+        share = self.fair_share()
+        return {t for t, b in self._tenant_bytes.items() if b > share}
+
+    def tenant_stats(self) -> dict:
+        return {
+            "fair_share_bytes": self.fair_share(),
+            "tenant_bytes": dict(sorted(self._tenant_bytes.items())),
+            "fairness_evictions": self.n_fairness_evictions,
+        }
 
     def pin(self, nid: int) -> None:
         if nid in self._entries:
@@ -154,7 +216,17 @@ class MaterializedCache:
         raise ValueError(f"unknown eviction policy {self.policy!r}")
 
     def maybe_gc(self) -> int:
-        """Evict until under gc_threshold * budget. Returns #evictions."""
+        """Evict until under gc_threshold * budget. Returns #evictions.
+
+        With tenants registered, eviction is *fair-share constrained*: while
+        any tenant is over its equal slice of the budget, victims must be
+        entries all of whose subscribers are over-share — Eq-2/3 scoring then
+        runs *within* that over-share pool, so a tenant below its fair share
+        is never evicted to make room for one above it.  If no such victim
+        exists (the over-share bytes are all pinned or shared with under-share
+        tenants), GC falls back to the global score so it always makes
+        progress — fairness must never wedge the allocator (starvation-free,
+        including under the fault-quarantine recompute paths)."""
         limit = self.gc_threshold * self.budget_bytes
         if self.used_bytes <= limit:
             return 0
@@ -164,9 +236,23 @@ class MaterializedCache:
             candidates = [e for e in self._entries.values() if e.pinned == 0]
             if not candidates:
                 break
-            victim = min(
-                candidates, key=lambda e: (not e.speculative, self._score(e))
-            )
+            victim = None
+            if self._tenant_bytes:
+                over = self.over_share()
+                if over:
+                    eligible = [
+                        e for e in candidates if e.tenants and e.tenants <= over
+                    ]
+                    if eligible:
+                        victim = min(
+                            eligible,
+                            key=lambda e: (not e.speculative, self._score(e)),
+                        )
+                        self.n_fairness_evictions += 1
+            if victim is None:
+                victim = min(
+                    candidates, key=lambda e: (not e.speculative, self._score(e))
+                )
             self.drop(victim.node.nid)
             evicted += 1
             self.n_evictions += 1

@@ -209,6 +209,46 @@ class CostModel:
     def samples(self) -> Dict[Tuple[str, str], List[Tuple[float, float]]]:
         return {k: list(v) for k, v in self._samples.items()}
 
+    def drift_report(
+        self,
+        baseline: Dict[str, float],
+        rel_tol: float = 3.0,
+    ) -> Dict[str, dict]:
+        """Compare freshly fitted unit costs against a persisted baseline
+        (``{"op|backend": unit_cost}``, the :meth:`save` schema) and flag
+        keys whose cost moved by more than ``rel_tol``× in either direction.
+
+        This is the CI drift alert: a calibration regression — a kernel
+        suddenly 3× slower, or a fit collapsing to the 1e-12 floor — fails
+        the bench-smoke job loudly instead of silently skewing every
+        scheduling and eviction decision downstream.  Keys present on only
+        one side are reported as ``missing_current`` / ``missing_baseline``
+        (informational; new ops are expected as the repo grows).
+        """
+        report: Dict[str, dict] = {}
+        current = {
+            f"{op}|{bk}": cost
+            for (op, bk), cost in self._backend_unit_cost.items()
+        }
+        for key in sorted(set(baseline) | set(current)):
+            base, cur = baseline.get(key), current.get(key)
+            if base is None:
+                report[key] = {"status": "missing_baseline", "current": cur}
+            elif cur is None:
+                report[key] = {"status": "missing_current", "baseline": base}
+            else:
+                ratio = cur / base if base > 0 else float("inf")
+                status = (
+                    "drift" if ratio > rel_tol or ratio < 1.0 / rel_tol else "ok"
+                )
+                report[key] = {
+                    "status": status,
+                    "baseline": base,
+                    "current": cur,
+                    "ratio": round(ratio, 4),
+                }
+        return report
+
     # -- persistence (fitted costs survive across sessions) ----------------------
     def save(self, path: str) -> None:
         """Dump the fitted per-(op, backend) unit costs (plus the per-op EWMA

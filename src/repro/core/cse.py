@@ -9,11 +9,18 @@ merged-parents) compute identical results.
 CSE'd incrementally; this explicit pass exists for externally constructed
 graphs and as the paper-faithful reference implementation (tested equivalent
 to hash consing in ``tests/test_core_dag.py``).
+
+Multi-tenant serving generalises CSE *across* DAGs: every tenant authors its
+program in a private DAG, and :func:`intern_program` hash-conses that program
+into the shared engine DAG — two tenants issuing structurally identical
+queries resolve to the same shared node, hence one materialisation
+(idempotence makes sharing safe for exactly the reason single-DAG merging
+is safe).
 """
 from __future__ import annotations
 
 from collections import deque
-from typing import Dict
+from typing import Dict, Sequence, Tuple
 
 from .dag import DAG, Node
 
@@ -52,3 +59,41 @@ def resolve(merged: Dict[int, int], nid: int) -> int:
     while nid in merged:
         nid = merged[nid]
     return nid
+
+
+def intern_program(
+    dst: DAG, roots: Sequence[Node]
+) -> Tuple[Dict[int, Node], int]:
+    """Hash-cons a foreign program (the ancestor closure of ``roots``, from
+    another DAG) into ``dst`` — cross-DAG CSE.
+
+    Nodes are re-added bottom-up through ``dst.add``, whose hash consing
+    resolves any node structurally identical to an existing ``dst`` node
+    (same op, literals, kwargs, and *interned* parents) to that node.
+
+    Returns ``(mapping, n_new)``: ``mapping[src_nid]`` is the corresponding
+    ``dst`` node, and ``n_new`` is how many genuinely new nodes ``dst``
+    gained — ``len(mapping) - n_new`` interned nodes were deduplicated
+    against existing shared state.
+    """
+    closure: Dict[int, Node] = {}
+    stack = list(roots)
+    while stack:
+        n = stack.pop()
+        if n.nid in closure:
+            continue
+        closure[n.nid] = n
+        stack.extend(n.parents)
+    mapping: Dict[int, Node] = {}
+    before = len(dst)
+    # source nid order is topological by construction (DAG._insert)
+    for n in sorted(closure.values(), key=lambda n: n.nid):
+        mapping[n.nid] = dst.add(
+            n.op,
+            parents=[mapping[p.nid] for p in n.parents],
+            literals=n.literals,
+            kwargs=n.kwargs,
+            interaction=n.is_interaction,
+            est_rows=n.est_rows,
+        )
+    return mapping, len(dst) - before

@@ -54,6 +54,7 @@ class InteractionRecord:
     ops_executed: int
     partial: bool  # served via the head/tail partial-result path
     at: float
+    tenant: Optional[str] = None  # multi-tenant serving attribution
 
 
 @dataclass
@@ -184,6 +185,12 @@ class Engine:
         self.speculation.partials = self.partials
         self.cache.on_evict = lambda node: self.scheduler.evicted_once.add(node.nid)
         self.metrics = Metrics()
+        # multi-tenant serving: when set (a list), every successful background
+        # pick appends its nid here — together with the interaction hit/miss
+        # sequence this is the replayable schedule log the determinism tests
+        # compare byte-for-byte.  Worker-thread picks are NOT logged (real
+        # mode is wall-clock nondeterministic by nature).
+        self.pick_log: Optional[List[int]] = None
         self._lock = threading.RLock()
         self._last_op: Optional[str] = None
         self._last_output_at: Optional[float] = None
@@ -262,7 +269,7 @@ class Engine:
             node.est_rows = float(nrows)
 
     # ------------------------------------------------------------ interaction --
-    def display(self, node: Node) -> Any:
+    def display(self, node: Node, tenant: Optional[str] = None) -> Any:
         """Execute an interaction: critical path only, everything else deferred."""
         node.is_interaction = True
         self._pause_worker()
@@ -313,6 +320,7 @@ class Engine:
                         - n_exec_before,
                         partial=partial,
                         at=self.clock.now(),
+                        tenant=tenant,
                     )
                 )
                 self.speculation.on_critical_path_executed(
@@ -441,9 +449,13 @@ class Engine:
             t = min(t, remaining)
         return max(t, 1e-6)
 
-    def think(self, seconds: float) -> dict:
+    def think(self, seconds: float, tenant: Optional[str] = None) -> dict:
         """Simulation: user thinks for ``seconds`` of virtual time while the
-        scheduler opportunistically executes non-critical operators."""
+        scheduler opportunistically executes non-critical operators.
+
+        ``tenant`` is the session whose think window this is; the scheduler
+        allocates it *across all tenants'* demand (cross-tenant Eq-1), and
+        quarantine decisions are scoped to the faulting tenant."""
         assert self.clock.virtual, "think() is for simulation mode; use start_background() in real mode"
         with self._lock, faults.background():
             t_start = self.clock.now()
@@ -454,7 +466,7 @@ class Engine:
                 if remaining <= 0:
                     break
                 node = self.scheduler.pick(
-                    self.cache.executed_ids(), now=self.clock.now()
+                    self.cache.executed_ids(), now=self.clock.now(), tenant=tenant
                 )
                 if node is None:
                     break
@@ -466,23 +478,26 @@ class Engine:
                     value = self.executor.execute(
                         node, inputs, self.partials, budget_s=remaining,
                         batch_budget_s=self._batch_budget_s(remaining),
+                        tenant=tenant,
                     )
                     if faults.is_corrupt(value):
                         raise faults.CorruptResult(node.label)
                     self.cache.put(node, value)
                     self._record_rows(node, value)
                     self.scheduler.clear_quarantine(node.nid)
+                    if self.pick_log is not None:
+                        self.pick_log.append(node.nid)
                 except Preempted:
                     break  # budget exhausted mid-unit; progress checkpointed
                 except Exception as exc:  # crash isolation (fault domain)
-                    self._absorb_background_fault(node, exc)
+                    self._absorb_background_fault(node, exc, tenant)
             busy = self.clock.now() - t_start
             self.metrics.background_busy_s += busy
             if self.clock.now() < deadline:  # idle remainder of think time
                 self.clock.advance(deadline - self.clock.now())
             return {"busy_s": busy, "idle_s": seconds - busy}
 
-    def drain_background(self) -> int:
+    def drain_background(self, tenant: Optional[str] = None) -> int:
         """Run all remaining non-critical work to completion (no budget).
 
         Nodes in active quarantine are skipped — the drain completes with
@@ -491,7 +506,7 @@ class Engine:
         with self._lock, faults.background():
             while True:
                 node = self.scheduler.pick(
-                    self.cache.executed_ids(), now=self.clock.now()
+                    self.cache.executed_ids(), now=self.clock.now(), tenant=tenant
                 )
                 if node is None:
                     return n
@@ -503,15 +518,18 @@ class Engine:
                     value = self.executor.execute(
                         node, inputs, self.partials,
                         batch_budget_s=self._batch_budget_s(),
+                        tenant=tenant,
                     )
                     if faults.is_corrupt(value):
                         raise faults.CorruptResult(node.label)
                     self.cache.put(node, value)
                     self._record_rows(node, value)
                     self.scheduler.clear_quarantine(node.nid)
+                    if self.pick_log is not None:
+                        self.pick_log.append(node.nid)
                     n += 1
                 except Exception as exc:  # crash isolation (fault domain)
-                    self._absorb_background_fault(node, exc)
+                    self._absorb_background_fault(node, exc, tenant)
 
     def _background_inputs(self, node: Node) -> List[Any]:
         """Fetch materialised parents for background execution, refusing to
@@ -527,19 +545,23 @@ class Engine:
             inputs.append(value)
         return inputs
 
-    def _absorb_background_fault(self, node: Node, exc: BaseException) -> None:
+    def _absorb_background_fault(
+        self, node: Node, exc: BaseException, tenant: Optional[str] = None
+    ) -> None:
         """The crash-isolation boundary: record, quarantine, carry on.
 
         Background failures must never kill the loop (the pre-fix behaviour
         silently disabled all think-time optimisation forever) and must never
         corrupt interactive results — the node re-enters scheduling after an
         exponential backoff, and the interactive path recomputes it on the
-        foreground (numpy-fallback) path if demanded sooner."""
+        foreground (numpy-fallback) path if demanded sooner.  With shared
+        DAGs the quarantine is keyed (tenant, node): one tenant's faulting
+        window must not block a deduped node for every other tenant."""
         now = self.clock.now()
         self.metrics.record_background_fault(node, exc, now)
         self.metrics.quarantines += 1
         entry = self.scheduler.quarantine(
-            node.nid, now, error=f"{type(exc).__name__}: {exc}"
+            node.nid, now, error=f"{type(exc).__name__}: {exc}", tenant=tenant
         )
         logger.warning(
             "background execution of %s failed (%s: %s); quarantined "

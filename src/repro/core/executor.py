@@ -157,6 +157,11 @@ class ExecStats:
     seconds: float = 0.0
     batches_run: int = 0  # fused dispatches (a batch of k counts k units_run)
     units_batched: int = 0  # units that rode a multi-unit batch
+    # multi-tenant serving: units attributed to the think window they ran in,
+    # keyed by tenant ("" = untenanted).  Units a tenant's window executes for
+    # *another* tenant's demand still land here — the attribution is "whose
+    # idle capacity paid", which is what cross-tenant harvest reporting needs.
+    units_by_tenant: Dict[str, int] = field(default_factory=dict)
 
 
 class Executor:
@@ -182,8 +187,13 @@ class Executor:
         preempt_check: Optional[Callable[[], bool]] = None,
         budget_s: Optional[float] = None,
         batch_budget_s: Optional[float] = None,
+        tenant: Optional[str] = None,
     ) -> Any:
         """Execute ``node``; raises :class:`Preempted` if interrupted.
+
+        ``tenant``: attribute the units this call completes (including a
+        preempted prefix) to that tenant's think window in
+        :attr:`ExecStats.units_by_tenant`.
 
         ``budget_s`` (virtual clocks only): stop when the simulated duration of
         the *next* unit would exceed the remaining budget — models an
@@ -201,10 +211,19 @@ class Executor:
         :class:`~repro.core.faults.CorruptResult` — the background boundaries
         quarantine on those; the foreground path never has them injected.
         """
-        with faults.scope(self.fault_plan):
-            return self._execute(
-                node, inputs, partials, preempt_check, budget_s, batch_budget_s
-            )
+        before = self.stats.units_run
+        try:
+            with faults.scope(self.fault_plan):
+                return self._execute(
+                    node, inputs, partials, preempt_check, budget_s, batch_budget_s
+                )
+        finally:
+            if tenant is not None:
+                delta = self.stats.units_run - before
+                if delta:
+                    self.stats.units_by_tenant[tenant] = (
+                        self.stats.units_by_tenant.get(tenant, 0) + delta
+                    )
 
     def _execute(
         self,

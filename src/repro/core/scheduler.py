@@ -18,7 +18,7 @@ from __future__ import annotations
 import math
 import random as _random
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterable, Optional, Sequence, Set
+from typing import Callable, Dict, Iterable, Optional, Sequence, Set, Tuple
 
 from .costmodel import CostModel
 from .dag import DAG, Node
@@ -62,7 +62,17 @@ class Scheduler:
     # oracle (the PR-3 invariant).
     quarantine_base_s: float = 0.5
     quarantine_max_failures: int = 5
-    quarantined: Dict[int, QuarantineEntry] = field(default_factory=dict)
+    # keyed (tenant, nid): once DAGs are shared across tenants, one tenant's
+    # faulting execution of a deduped node must not quarantine it for every
+    # tenant — another tenant's think window may still attempt it (and a
+    # success clears every tenant's history for the node).  The single-tenant
+    # engine passes tenant=None everywhere, which degrades to the old
+    # one-key-per-node behaviour exactly.  A (None, nid) entry — a fault with
+    # no tenant attribution, e.g. the real-mode worker — conservatively
+    # blocks all tenants.
+    quarantined: Dict[Tuple[Optional[str], int], QuarantineEntry] = field(
+        default_factory=dict
+    )
     _rng: _random.Random = field(init=False)
 
     def __post_init__(self) -> None:
@@ -86,12 +96,27 @@ class Scheduler:
         self._demand_memo: dict[int, bool] = {}  # evicted source -> has demand
         self._memo_done: Optional[frozenset] = None
         self._node_by_id: dict[int, Node] = {}
+        # -- cross-tenant dimension (multi-tenant serving) ------------------
+        # tenant -> the node ids of that tenant's program cone.  When any
+        # demand set is registered, Eq-1 becomes cross-tenant:
+        #     U(s) = sum_t w_t * sum_{j in D_s ∩ demand_t} c_j
+        # with untenanted descendants (in no tenant's cone) kept at weight 1
+        # under the pseudo-tenant key None, so directly-added nodes still
+        # schedule.  The per-(source, tenant) partial sums are memoised in
+        # _tenant_utility_memo and delta-invalidated by the same descendant-
+        # cone rule as the single-tenant sums; the weights (think-time
+        # urgency, set by the serving layer) are applied at read time so
+        # think-model drift never touches the memos.
+        self._tenant_demand: dict[str, frozenset] = {}
+        self.tenant_weight: dict[str, float] = {}
+        self._tenant_utility_memo: dict[tuple[int, Optional[str]], float] = {}
 
     # -- memoised graph walks ---------------------------------------------------
     def _drop_all_done_memos(self) -> None:
         self._delivery_memo.clear()
         self._utility_memo.clear()
         self._demand_memo.clear()
+        self._tenant_utility_memo.clear()
 
     def _sync_caches(self, done: frozenset) -> None:
         v = self.dag.version
@@ -112,6 +137,7 @@ class Scheduler:
             self._cost_version = cv
             self._delivery_memo.clear()
             self._utility_memo.clear()
+            self._tenant_utility_memo.clear()
         if done != self._memo_done:
             prev = self._memo_done
             if prev is None:
@@ -140,6 +166,14 @@ class Scheduler:
             ]
             for s in stale:
                 memo.pop(s, None)
+        if self._tenant_utility_memo:
+            stale_t = [
+                key
+                for key in self._tenant_utility_memo
+                if not affected.isdisjoint(self._desc_id_set_of(key[0]))
+            ]
+            for key in stale_t:
+                self._tenant_utility_memo.pop(key, None)
 
     def _descendants(self, node: Node) -> list[Node]:
         d = self._desc_cache.get(node.nid)
@@ -168,9 +202,59 @@ class Scheduler:
             self._delivery_memo[j.nid] = c
         return c
 
+    # -- cross-tenant demand (multi-tenant serving) -----------------------------
+    def set_tenant_demand(self, tenant: str, nids: Iterable[int]) -> None:
+        """Register (or extend to) the node-id cone tenant's program demands.
+
+        Any registered demand switches :meth:`utility` to the cross-tenant
+        Eq-1 sum; the tenant's memoised partial sums are dropped (its demand
+        set changed), everything else survives."""
+        self._tenant_demand[tenant] = frozenset(nids)
+        self.tenant_weight.setdefault(tenant, 1.0)
+        stale = [k for k in self._tenant_utility_memo if k[1] == tenant]
+        for k in stale:
+            self._tenant_utility_memo.pop(k, None)
+        # the untenanted remainder sums also shift when a demand set changes
+        stale_none = [k for k in self._tenant_utility_memo if k[1] is None]
+        for k in stale_none:
+            self._tenant_utility_memo.pop(k, None)
+
+    def tenant_demand(self, tenant: str) -> frozenset:
+        return self._tenant_demand.get(tenant, frozenset())
+
+    def _tenant_utility(
+        self, source: Node, done: frozenset, tenant: Optional[str]
+    ) -> float:
+        """Memoised Eq-1 partial sum of ``source`` restricted to one tenant's
+        demand cone (``None``: descendants in no tenant's cone)."""
+        key = (source.nid, tenant)
+        total = self._tenant_utility_memo.get(key)
+        if total is None:
+            total = 0.0
+            if tenant is None:
+                all_demand: set = set()
+                for d in self._tenant_demand.values():
+                    all_demand |= d
+                for j in self._descendants(source):
+                    if j.nid not in all_demand:
+                        total += self._delivery_cost(j, done)
+            else:
+                demand = self._tenant_demand.get(tenant, frozenset())
+                if not demand.isdisjoint(self._desc_id_set(source)):
+                    for j in self._descendants(source):
+                        if j.nid in demand:
+                            total += self._delivery_cost(j, done)
+            self._tenant_utility_memo[key] = total
+        return total
+
     # -- utilities ---------------------------------------------------------------
     def utility(self, source: Node, executed: Iterable[int]) -> float:
-        """Eq 1 (or Eq 4 when a predictor is used under policy='utility_p')."""
+        """Eq 1 (or Eq 4 when a predictor is used under policy='utility_p').
+
+        With tenant demand registered the sum is cross-tenant: each
+        descendant's delivery cost is weighted by the total urgency weight of
+        the tenants demanding it, so one tenant's think window is allocated
+        across *all* tenants' background queues."""
         done = executed if isinstance(executed, frozenset) else frozenset(executed)
         self._sync_caches(done)
         use_p = self.policy == "utility_p" and self.predictor is not None
@@ -180,6 +264,12 @@ class Scheduler:
             total = 0.0
             for j in self._descendants(source):
                 total += self._delivery_cost(j, done) * self.predictor.p_interaction(j)
+        elif self._tenant_demand:
+            total = self._tenant_utility(source, done, None)
+            for t in self._tenant_demand:
+                part = self._tenant_utility(source, done, t)
+                if part:
+                    total += self.tenant_weight.get(t, 1.0) * part
         else:
             total = self._utility_memo.get(source.nid)
             if total is None:
@@ -216,12 +306,19 @@ class Scheduler:
         return out
 
     # -- quarantine (fault domains) ------------------------------------------------
-    def quarantine(self, nid: int, now: float, error: str = "") -> QuarantineEntry:
+    def quarantine(
+        self, nid: int, now: float, error: str = "", tenant: Optional[str] = None
+    ) -> QuarantineEntry:
         """Record a background failure of ``nid``: exponential backoff, then
-        permanent quarantine after ``quarantine_max_failures`` failures."""
-        entry = self.quarantined.get(nid)
+        permanent quarantine after ``quarantine_max_failures`` failures.
+
+        The entry is scoped to ``tenant`` (the tenant whose think window was
+        executing when the fault fired) — a shared, deduped node stays
+        schedulable from every other tenant's window."""
+        key = (tenant, nid)
+        entry = self.quarantined.get(key)
         if entry is None:
-            entry = self.quarantined[nid] = QuarantineEntry()
+            entry = self.quarantined[key] = QuarantineEntry()
         entry.failures += 1
         entry.last_error = error
         if entry.failures >= self.quarantine_max_failures:
@@ -231,33 +328,49 @@ class Scheduler:
         return entry
 
     def clear_quarantine(self, nid: int) -> None:
-        """A successful execution ends the node's quarantine history."""
-        self.quarantined.pop(nid, None)
+        """A successful execution ends the node's quarantine history — for
+        every tenant: the node demonstrably works, whoever ran it."""
+        for key in [k for k in self.quarantined if k[1] == nid]:
+            self.quarantined.pop(key, None)
 
-    def is_quarantined(self, nid: int, now: Optional[float] = None) -> bool:
-        """Active quarantine verdict.  With ``now=None`` (legacy call sites)
-        only permanent quarantines hold; timed backoffs need the caller's
-        clock to expire against."""
-        entry = self.quarantined.get(nid)
-        if entry is None:
-            return False
-        if math.isinf(entry.until):
-            return True
-        return now is not None and now < entry.until
+    def is_quarantined(
+        self, nid: int, now: Optional[float] = None, tenant: Optional[str] = None
+    ) -> bool:
+        """Active quarantine verdict for one tenant's window.  With
+        ``now=None`` (legacy call sites) only permanent quarantines hold;
+        timed backoffs need the caller's clock to expire against.  A
+        tenant-attributed check also honours untenanted ``(None, nid)``
+        entries — a fault with no attribution blocks everyone."""
+        for key in ((tenant, nid), (None, nid)) if tenant is not None else ((None, nid),):
+            entry = self.quarantined.get(key)
+            if entry is None:
+                continue
+            if math.isinf(entry.until):
+                return True
+            if now is not None and now < entry.until:
+                return True
+        return False
 
     def quarantine_summary(self) -> dict:
         return {
-            nid: {"failures": e.failures, "until": e.until, "error": e.last_error}
-            for nid, e in sorted(self.quarantined.items())
+            (nid if tenant is None else f"{tenant}:{nid}"): {
+                "failures": e.failures, "until": e.until, "error": e.last_error
+            }
+            for (tenant, nid), e in sorted(
+                self.quarantined.items(), key=lambda kv: (kv[0][0] or "", kv[0][1])
+            )
         }
 
     def pick(
-        self, executed: Iterable[int], now: Optional[float] = None
+        self,
+        executed: Iterable[int],
+        now: Optional[float] = None,
+        tenant: Optional[str] = None,
     ) -> Optional[Node]:
         done = frozenset(executed)
         srcs = self.sources(done)
         if self.quarantined:
-            srcs = [n for n in srcs if not self.is_quarantined(n.nid, now)]
+            srcs = [n for n in srcs if not self.is_quarantined(n.nid, now, tenant)]
         if not srcs:
             return None
         if self.policy == "fifo":
@@ -271,12 +384,17 @@ class Scheduler:
         # "utility" / "utility_p": break ties by earliest specification order
         return max(srcs, key=lambda n: (self.utility(n, done), -n.nid))
 
-    def plan(self, executed: Iterable[int], limit: Optional[int] = None) -> list[Node]:
+    def plan(
+        self,
+        executed: Iterable[int],
+        limit: Optional[int] = None,
+        tenant: Optional[str] = None,
+    ) -> list[Node]:
         """Greedy full ordering (simulation convenience): repeatedly pick."""
         done = set(executed)
         order: list[Node] = []
         while True:
-            nxt = self.pick(done)
+            nxt = self.pick(done, tenant=tenant)
             if nxt is None or (limit is not None and len(order) >= limit):
                 return order
             order.append(nxt)
@@ -284,12 +402,16 @@ class Scheduler:
 
     # -- self-check oracle ---------------------------------------------------------
     def reference_pick(
-        self, executed: Iterable[int], now: Optional[float] = None
+        self,
+        executed: Iterable[int],
+        now: Optional[float] = None,
+        tenant: Optional[str] = None,
     ) -> Optional[Node]:
         """Brute-force, memo-free re-derivation of ``pick()`` under the
         "utility" policy: walks the DAG and the cost model directly on every
-        call.  This is the oracle the delta-maintained memos are verified
-        against (the scheduler fuzz tests and ``bench_background``'s
+        call (including the cross-tenant weighting when tenant demand is
+        registered).  This is the oracle the delta-maintained memos are
+        verified against (the scheduler fuzz tests and ``bench_background``'s
         ``plan_order_unchanged`` invariant) — keep it dumb."""
         done = frozenset(executed)
         srcs = []
@@ -300,16 +422,27 @@ class Scheduler:
                 if d.nid != n.nid
             ):
                 continue
-            if self.is_quarantined(n.nid, now):
+            if self.is_quarantined(n.nid, now, tenant):
                 continue
             srcs.append(n)
         if not srcs:
             return None
 
+        def weight_of(j: Node) -> float:
+            if not self._tenant_demand:
+                return 1.0
+            w = 0.0
+            demanded = False
+            for t, demand in self._tenant_demand.items():
+                if j.nid in demand:
+                    demanded = True
+                    w += self.tenant_weight.get(t, 1.0)
+            return w if demanded else 1.0
+
         def util(s: Node) -> float:
             total = 0.0
             for j in self.dag.descendants(s, include_self=True):
-                total += self.cost_model.delivery_cost(j, done)
+                total += self.cost_model.delivery_cost(j, done) * weight_of(j)
             if self.extra_utility is not None:
                 total += self.extra_utility(s)
             return total

@@ -1,3 +1,11 @@
 """repro.data — deterministic synthetic streams + prefetching loader."""
 from .loader import PrefetchLoader
-from .synth import SynthSpec, batch_at, make_iterator, spec_for
+from .synth import (
+    SynthSpec,
+    TraceEvent,
+    TraceSpec,
+    batch_at,
+    make_iterator,
+    poisson_trace,
+    spec_for,
+)

@@ -1,3 +1,8 @@
-"""repro.serve — prefill/decode serving + opportunistic sessions."""
+"""repro.serve — prefill/decode serving + opportunistic sessions.
+
+Multi-tenant serving (``MultiTenantServer``) lives in its own module and
+imports only the core layer, so trace-replay benchmarks and tests can use it
+without pulling in the model stack."""
 from .engine import greedy_generate, make_serve_fns
+from .multitenant import MultiTenantServer, TenantProgram
 from .session import OpportunisticServer

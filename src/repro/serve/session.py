@@ -81,6 +81,7 @@ class OpportunisticServer:
         self._prefill, self._decode, self._new_cache = make_serve_fns(
             cfg, self.ctx, capacity=capacity
         )
+        self._tenant_demand: Dict[str, set] = {}
         self._register_ops()
 
     # ------------------------------------------------------------- op defs --
@@ -143,24 +144,50 @@ class OpportunisticServer:
         )
 
     # ---------------------------------------------------------------- API --
-    def _prefill_node(self, prompt: Sequence[int]) -> Node:
-        return self.engine.add("prefill", literals=[tuple(int(t) for t in prompt)])
+    def _subscribe(self, node: Node, tenant: Optional[str]) -> None:
+        """Multi-tenant bookkeeping: charge the node's cached value against
+        ``tenant``'s fair share and add it to the tenant's demand set so the
+        cross-tenant scheduler weights it (serving tenants share one DAG, so
+        identical prompts dedup by hash consing — both tenants subscribe)."""
+        if tenant is None:
+            return
+        self.engine.cache.subscribe(node.nid, tenant)
+        demand = self._tenant_demand.setdefault(tenant, set())
+        demand.add(node.nid)
+        self.engine.scheduler.set_tenant_demand(tenant, demand)
 
-    def request(self, prompt: Sequence[int], n_tokens: int = 8) -> GenResult:
+    def _prefill_node(
+        self, prompt: Sequence[int], tenant: Optional[str] = None
+    ) -> Node:
+        node = self.engine.add(
+            "prefill", literals=[tuple(int(t) for t in prompt)]
+        )
+        self._subscribe(node, tenant)
+        return node
+
+    def request(
+        self,
+        prompt: Sequence[int],
+        n_tokens: int = 8,
+        tenant: Optional[str] = None,
+    ) -> GenResult:
         """A user request — an *interaction*: preempts background work, runs
         only its critical path (prefill reused if speculatively warmed)."""
-        pre = self._prefill_node(prompt)
+        pre = self._prefill_node(prompt, tenant)
         gen = self.engine.add("generate", parents=[pre], literals=[int(n_tokens)])
-        return self.engine.display(gen)
+        self._subscribe(gen, tenant)
+        return self.engine.display(gen, tenant=tenant)
 
-    def anticipate(self, prompt: Sequence[int]) -> Node:
+    def anticipate(
+        self, prompt: Sequence[int], tenant: Optional[str] = None
+    ) -> Node:
         """Register a *predicted* future prompt: its prefill becomes a
         non-critical operator the scheduler may run during think time
         (speculative materialisation of the prefix cache)."""
-        return self._prefill_node(prompt)
+        return self._prefill_node(prompt, tenant)
 
-    def think(self, seconds: float) -> dict:
-        return self.engine.think(seconds)
+    def think(self, seconds: float, tenant: Optional[str] = None) -> dict:
+        return self.engine.think(seconds, tenant=tenant)
 
     @property
     def metrics(self):

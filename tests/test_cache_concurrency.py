@@ -150,3 +150,144 @@ def test_eviction_of_speculative_results_first():
     cache.put(nodes[2], np.arange(20))  # 160 bytes → GC
     assert nodes[0].nid not in cache  # speculative victim goes first
     assert nodes[1].nid in cache
+
+
+# ---------------------------------------------- multi-tenant fairness -----------
+def _tenant_invariant(cache: MaterializedCache) -> None:
+    """The per-tenant byte-accounting invariant: each tenant's charged bytes
+    equal the sum of entry sizes over the entries it subscribes to (full size
+    per subscriber — see CacheEntry.tenants)."""
+    for t in cache._tenant_bytes:
+        expected = sum(
+            e.m_bytes for e in cache._entries.values() if t in e.tenants
+        )
+        assert cache.tenant_bytes(t) == expected, t
+
+
+def test_tenant_byte_accounting_through_churn():
+    cache = _mk_cache(budget=100_000)
+    nodes = _nodes(8)
+    for i, node in enumerate(nodes):
+        cache.subscribe(node.nid, f"t{i % 3}")
+    # a deduped node every tenant subscribes to
+    for t in ("t0", "t1", "t2"):
+        cache.subscribe(nodes[0].nid, t)
+    for node in nodes:
+        cache.put(node, np.arange(50))  # 400 bytes
+    _tenant_invariant(cache)
+    # the shared entry charges its full size against every subscriber
+    assert cache._entries[nodes[0].nid].tenants == {"t0", "t1", "t2"}
+    # replacement keeps subscribers and re-charges the new size
+    cache.put(nodes[0], np.arange(100))
+    assert cache._entries[nodes[0].nid].tenants == {"t0", "t1", "t2"}
+    _tenant_invariant(cache)
+    # late subscription to an already-cached entry charges immediately
+    # (nodes[1] belongs to t1; t2 subscribes to it only now)
+    before = cache.tenant_bytes("t2")
+    cache.subscribe(nodes[1].nid, "t2")
+    assert cache.tenant_bytes("t2") == before + cache._entries[nodes[1].nid].m_bytes
+    _tenant_invariant(cache)
+    cache.drop(nodes[0].nid)
+    _tenant_invariant(cache)
+
+
+def test_n_tenant_concurrent_put_get_gc_accounting():
+    """N tenants hammering a shared cache (engine-lock discipline) with GC
+    pressure: the per-tenant accounting invariant must hold at the end, and
+    no interleaving may corrupt the global byte count."""
+    cache = _mk_cache(budget=20_000, gc_threshold=0.8)
+    n_tenants = 4
+    nodes = _nodes(40)
+    # tenant i owns nodes i mod n; every tenant also subscribes to node 0
+    for i, node in enumerate(nodes):
+        cache.subscribe(node.nid, f"t{i % n_tenants}")
+    for t in range(n_tenants):
+        cache.subscribe(nodes[0].nid, f"t{t}")
+    lock = threading.RLock()
+    errors = []
+
+    def worker(tid):
+        rng = np.random.default_rng(tid)
+        mine = [n for i, n in enumerate(nodes) if i % n_tenants == tid]
+        try:
+            for _ in range(300):
+                node = mine[int(rng.integers(len(mine)))]
+                action = rng.random()
+                with lock:
+                    if action < 0.55:  # puts force regular GC at this budget
+                        cache.put(node, np.arange(int(rng.integers(1, 300))))
+                    elif action < 0.85:
+                        try:
+                            cache.get(node)
+                        except KeyError:
+                            pass
+                    else:
+                        cache.drop(node.nid)
+        except Exception as exc:  # pragma: no cover - failure path
+            errors.append(exc)
+
+    threads = [
+        threading.Thread(target=worker, args=(t,)) for t in range(n_tenants)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+    with lock:
+        assert cache.used_bytes == sum(
+            e.m_bytes for e in cache._entries.values()
+        )
+        _tenant_invariant(cache)
+        assert cache.n_evictions > 0  # GC actually exercised
+
+
+def test_gc_does_not_evict_under_share_tenant_for_over_share_one():
+    """Fair-share rule: while one tenant is over its equal slice of the
+    budget, the under-share tenant's entries are never the victim."""
+    cache = _mk_cache(budget=2_000, gc_threshold=0.8)  # fair share: 1000
+    nodes = _nodes(10)
+    poor = nodes[0]
+    cache.subscribe(poor.nid, "poor")
+    for n in nodes[1:]:
+        cache.subscribe(n.nid, "rich")
+    cache.put(poor, np.arange(25))  # 200 bytes: well under share
+    for n in nodes[1:]:
+        cache.put(n, np.arange(50))  # rich keeps blowing the budget → GC
+    assert poor.nid in cache  # never sacrificed for the over-share tenant
+    assert cache.tenant_bytes("poor") == 200
+    assert cache.tenant_bytes("rich") <= cache.budget_bytes
+    assert cache.n_fairness_evictions > 0  # the fair-share rule chose victims
+    _tenant_invariant(cache)
+
+
+def test_gc_falls_back_to_global_score_when_fairness_would_wedge():
+    """Starvation freedom: if every unpinned entry belongs to an under-share
+    tenant (or the over-share bytes are pinned), GC must still make progress
+    via the global score instead of spinning."""
+    cache = _mk_cache(budget=1_000, gc_threshold=0.8)
+    nodes = _nodes(6)
+    # two tenants, both stay under the 500-byte fair share individually,
+    # but the untenanted speculative entries push total over the threshold
+    cache.subscribe(nodes[0].nid, "a")
+    cache.subscribe(nodes[1].nid, "b")
+    cache.put(nodes[0], np.arange(40))  # 320: a under share
+    cache.put(nodes[1], np.arange(40))  # 320: b under share → total 640
+    cache.put(nodes[2], np.arange(40))  # untenanted → 960 > 800: GC must act
+    assert cache.used_bytes <= 0.8 * cache.budget_bytes
+    _tenant_invariant(cache)
+
+
+def test_fair_share_denominator_counts_registered_tenants():
+    cache = _mk_cache(budget=9_000)
+    assert cache.fair_share() == 9_000  # no tenants: whole budget
+    cache.register_tenant("a")
+    cache.register_tenant("b")
+    cache.register_tenant("c")
+    assert cache.fair_share() == 3_000
+    nodes = _nodes(1)
+    cache.subscribe(nodes[0].nid, "a")
+    cache.put(nodes[0], np.arange(500))  # 4000 bytes: a over its 3000 share
+    assert cache.over_share() == {"a"}
+    stats = cache.tenant_stats()
+    assert stats["tenant_bytes"] == {"a": 4000, "b": 0, "c": 0}
