@@ -31,6 +31,7 @@ import numpy as np
 from repro.core.costmodel import CostModel
 from repro.frame import backend as BK
 from repro.frame import from_pydict
+from repro.frame.planner import Planner
 from repro.frame.table import Partition
 
 N_CATEGORIES = 64
@@ -115,11 +116,120 @@ WORKLOADS: Dict[str, tuple] = {
     "describe_partial": ("describe", _describe),
     "groupby_partial": ("groupby_agg", _groupby),
     "value_counts_partial": ("value_counts", _value_counts),
-    "topk_sort_partial": ("sort_values", _topk_sort),
-    "full_sort_partial": ("sort_values", _full_sort),
+    # the two sort regimes have opposite backend verdicts (12× win vs 5×
+    # loss) and calibrate under split planning keys, never one curve
+    "topk_sort_partial": ("sort_values:topk", _topk_sort),
+    "full_sort_partial": ("sort_values:full", _full_sort),
     "join_partial": ("join", _join_inner),
     "filter_select": ("filter", _filter_select),
 }
+
+# workload name -> the planner key its dispatch plans under
+PLANNER_WORKLOADS = {
+    "describe_partial": "describe",
+    "groupby_partial": "groupby_agg",
+    "value_counts_partial": "value_counts",
+    "topk_sort_partial": "sort_values:topk",
+    "full_sort_partial": "sort_values:full",
+    "filter_select": "filter",
+}
+
+
+def planner_workloads(report: dict, cold: Planner, calibrated_cm: CostModel) -> dict:
+    """Per-workload planner verdicts over the measured forced-backend rows.
+
+    ``planned_backend`` is the cold-start choice (priors only — what the
+    very first session does); ``calibrated_backend`` re-plans from this
+    run's fitted costs (what a warmed session does).  ``planner_seconds``
+    is the chosen backend's measured median — the planner's own overhead is
+    a dict lookup and two multiplies, below timer resolution — and
+    ``ratio_vs_best_single`` is how close that lands to the best single
+    backend (1.0 = the planner picked the winner)."""
+    calib = Planner(calibrated_cm, use_priors=False)
+    out: dict = {}
+    for name, key in PLANNER_WORKLOADS.items():
+        entry = report["workloads"].get(name)
+        if entry is None or "xla" not in entry or "numpy" not in entry:
+            continue
+        rows = entry["xla"]["rows"]
+        chosen = cold.choose(key, rows, "xla")
+        planner_s = entry[chosen]["seconds"]
+        best_s = min(entry[bk]["seconds"] for bk in ("numpy", "xla"))
+        out[name] = {
+            "key": key,
+            "planned_backend": chosen,
+            "calibrated_backend": calib.choose(key, rows, "xla"),
+            "planner_seconds": planner_s,
+            "ratio_vs_best_single": round(best_s / max(planner_s, 1e-12), 4),
+        }
+        print(f"{name:>22s}  planner->{chosen:>6s}  "
+              f"{planner_s * 1e3:9.3f} ms  "
+              f"({out[name]['ratio_vs_best_single']:.3f}x of best single)",
+              flush=True)
+    return out
+
+
+def run_fusion(nrows: int, warmup: int, repeats: int, planner: Planner) -> dict:
+    """Fused filter→op composites vs the equivalent two-dispatch plan.
+
+    The unfused side is the *honest* alternative the planner would run:
+    ``select_rows`` on numpy (its verdict for the filter stage) feeding the
+    xla partial.  Results are bit-identical by the fusion parity contract
+    (``tests/test_fused.py``); this phase times them."""
+    part = make_partition(nrows, seed=5)
+    keep = np.asarray(part.columns["x"].data) > 5.0
+    chains = {
+        "fused:filter|describe": (
+            lambda: BK.fused_stats_partition(
+                part, keep, cols=("x", "y", "z"), backend="xla"
+            ),
+            lambda: BK.partial_stats(
+                BK.select_rows(part, keep, backend="numpy"),
+                cols=("x", "y", "z"), backend="xla",
+            ),
+        ),
+        "fused:filter|groupby_agg": (
+            lambda: BK.fused_groupby_partition(part, keep, "k", AGGS, backend="xla"),
+            lambda: BK.partial_groupby(
+                BK.select_rows(part, keep, backend="numpy"), "k", AGGS, backend="xla"
+            ),
+        ),
+        "fused:filter|sort_values:topk": (
+            lambda: BK.fused_topk_partition(part, keep, "x", True, 32, backend="xla"),
+            lambda: BK.partial_sort(
+                BK.select_rows(part, keep, backend="numpy"), "x", True, 32,
+                backend="xla",
+            ),
+        ),
+    }
+    out: dict = {}
+    for key, (fused_fn, unfused_fn) in chains.items():
+        op2 = key.split("|", 1)[1]
+        fuses = planner.choose_fusion(key, "xla", part.nrows, ["filter", op2])
+        for _ in range(warmup):
+            fused_fn()
+            unfused_fn()
+        ft, ut = [], []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            r = fused_fn()
+            ft.append(time.perf_counter() - t0)
+            assert r is not None, f"{key}: fused kernel declined"
+            t0 = time.perf_counter()
+            unfused_fn()
+            ut.append(time.perf_counter() - t0)
+        fs, us = float(np.median(ft)), float(np.median(ut))
+        out[key] = {
+            "rows": part.nrows,
+            "planner_fuses": fuses,
+            "fused_seconds": fs,
+            "unfused_seconds": us,
+            "speedup_fused_vs_unfused": round(us / max(fs, 1e-12), 3),
+        }
+        print(f"{key:>30s}  fused {fs * 1e3:9.3f} ms  "
+              f"unfused {us * 1e3:9.3f} ms  "
+              f"{out[key]['speedup_fused_vs_unfused']:6.3f}x", flush=True)
+    return out
 
 
 def run(nrows: int, interpret_nrows: int, warmup: int, repeats: int,
@@ -167,6 +277,17 @@ def run(nrows: int, interpret_nrows: int, warmup: int, repeats: int,
     report["calibration_s_per_row"] = {
         f"{op}|{bk}": cost for (op, bk), cost in sorted(fitted.items())
     }
+    # -- planner phase: cold-start verdicts, calibrated re-plans, fusion ------
+    cold = Planner(CostModel())  # fresh model: decisions come from the priors
+    wl = planner_workloads(report, cold, cm)
+    fusion = run_fusion(nrows, warmup, max(repeats, 2), cold)
+    report["planner"] = {
+        "workloads": wl,
+        "fusion": fusion,
+        # prior-based decision counters: pure arithmetic over the committed
+        # priors, so identical on every machine — the drift gate pins them
+        "decisions": cold.cost_model.planner_report(),
+    }
     return report
 
 
@@ -176,15 +297,32 @@ def check_drift(report: dict, baseline_path: str, rel_tol: float) -> dict:
     whose cost moved more than ``rel_tol``× either way.  CI runs this on the
     smoke fit with a generous tolerance — the target is calibration
     *regressions* (a fit collapsing to the floor, a kernel going an order of
-    magnitude slower), not machine-to-machine noise."""
+    magnitude slower), not machine-to-machine noise.
+
+    The planner's prior-based decision counters are compared *exactly*: they
+    are deterministic arithmetic over the committed priors, so any mismatch
+    means the planner's verdicts changed — a behaviour change that must show
+    up in a diff of the committed baseline, never silently."""
     cm = CostModel()
     for key, cost in report["calibration_s_per_row"].items():
-        op, _, bk = key.partition("|")
+        op, _, bk = key.rpartition("|")  # fused op keys contain "|"
         cm._backend_unit_cost[(op, bk)] = float(cost)
     with open(baseline_path) as f:
-        baseline = json.load(f).get("calibration_s_per_row", {})
-    drift = cm.drift_report(baseline, rel_tol=rel_tol)
-    return {k: v for k, v in drift.items() if v["status"] == "drift"}
+        baseline = json.load(f)
+    drift = cm.drift_report(
+        baseline.get("calibration_s_per_row", {}), rel_tol=rel_tol
+    )
+    bad = {k: v for k, v in drift.items() if v["status"] == "drift"}
+    base_dec = baseline.get("planner", {}).get("decisions", {})
+    cur_dec = report.get("planner", {}).get("decisions", {})
+    for k in sorted(set(base_dec) | set(cur_dec)):
+        if base_dec.get(k, 0) != cur_dec.get(k, 0):
+            bad[f"planner_decision:{k}"] = {
+                "status": "decision_flip",
+                "baseline": base_dec.get(k, 0),
+                "current": cur_dec.get(k, 0),
+            }
+    return bad
 
 
 def main() -> None:
@@ -208,8 +346,20 @@ def main() -> None:
         report = run(20_000, 4_096, warmup=1, repeats=1)
         assert report["workloads"], "no workloads ran"
         assert report["calibration_s_per_row"], "calibration produced no fits"
+        planner = report.get("planner", {})
+        assert planner.get("workloads"), "planner section missing"
+        assert planner.get("decisions"), "planner recorded no decisions"
+        # the headline demotion: planner-chosen value_counts must beat the
+        # forced-xla dispatch it exists to avoid
+        vc = planner["workloads"]["value_counts_partial"]
+        xla_s = report["workloads"]["value_counts_partial"]["xla"]["seconds"]
+        assert vc["planner_seconds"] < xla_s, (
+            f"planner value_counts {vc['planner_seconds']:.6f}s not faster "
+            f"than forced xla {xla_s:.6f}s"
+        )
         print("SMOKE OK:", len(report["workloads"]), "workloads,",
-              len(report["calibration_s_per_row"]), "fitted costs")
+              len(report["calibration_s_per_row"]), "fitted costs,",
+              len(planner["workloads"]), "planner verdicts")
         if args.check_drift:
             drifted = check_drift(report, args.check_drift, args.drift_tol)
             if drifted:

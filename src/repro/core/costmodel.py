@@ -96,6 +96,14 @@ class CostModel:
     )
     # fitted per-backend unit costs (seconds/row), set by calibrate()
     _backend_unit_cost: Dict[Tuple[str, str], float] = field(default_factory=dict)
+    # fitted per-backend fixed dispatch overhead (seconds/call): the affine
+    # intercept of calibrate()'s fit — what makes small partitions stop
+    # looking free on jit backends (the planner's "dispatch tax" term)
+    _backend_overhead: Dict[Tuple[str, str], float] = field(default_factory=dict)
+    # planner decision counters: "op|backend|reason" -> count.  Persisted with
+    # the fitted costs so mis-planning is visible across sessions and in the
+    # bench drift gate.
+    planner_decisions: Dict[str, int] = field(default_factory=dict)
     _samples_since_calibrate: int = 0
 
     # -- estimation ------------------------------------------------------------
@@ -112,6 +120,43 @@ class CostModel:
 
     def est_rows(self, node: Node) -> float:
         return _est_rows(node)
+
+    # -- size-aware estimation (the planner's estimate/perform split) ------------
+    def estimate(self, op: str, backend: str, rows: float) -> Optional[float]:
+        """Predicted wall seconds for one dispatch of ``op`` on ``backend``
+        at ``rows`` rows: ``unit_cost * rows + overhead`` from the affine
+        calibration fit.  Returns ``None`` when the key has never been
+        calibrated (callers fall back to priors or the precedence chain) —
+        a missing key must never silently estimate as free."""
+        a = self._backend_unit_cost.get((op, backend))
+        if a is None:
+            return None
+        b = self._backend_overhead.get((op, backend), 0.0)
+        return a * max(float(rows), 0.0) + b
+
+    def has_calibration(self, op: str, backend: str) -> bool:
+        return (op, backend) in self._backend_unit_cost
+
+    def overhead(self, op: str, backend: str) -> float:
+        return self._backend_overhead.get((op, backend), 0.0)
+
+    def install_prior(
+        self, op: str, backend: str, unit_cost: float, overhead: float = 0.0
+    ) -> None:
+        """Seed a (unit_cost, overhead) pair for a key with no measured
+        samples yet — cold-start priors (e.g. the committed bench verdicts).
+        Measured calibration overwrites the prior at the next refit."""
+        if (op, backend) not in self._backend_unit_cost:
+            self._backend_unit_cost[(op, backend)] = max(float(unit_cost), 1e-12)
+            self._backend_overhead[(op, backend)] = max(float(overhead), 0.0)
+            self.version += 1
+
+    def note_planner_decision(self, op: str, backend: str, reason: str) -> None:
+        key = f"{op}|{backend}|{reason}"
+        self.planner_decisions[key] = self.planner_decisions.get(key, 0) + 1
+
+    def planner_report(self) -> Dict[str, int]:
+        return dict(sorted(self.planner_decisions.items()))
 
     def cost(self, node: Node) -> float:
         """Estimated cost (seconds) of executing ``node`` alone, inputs ready.
@@ -191,17 +236,34 @@ class CostModel:
     def calibrate(self) -> Dict[Tuple[str, str], float]:
         """Fit per-(op, backend) unit costs from the recorded samples.
 
-        Least squares through the origin: ``seconds ≈ unit_cost * rows``
-        minimised over the sample set (Σ r·s / Σ r²) — robust to mixed
-        partition sizes, dominated by the large partitions that matter.
-        Returns the fitted map (also installed for :meth:`unit_cost`).
+        Affine least squares: ``seconds ≈ unit_cost * rows + overhead`` —
+        the intercept is the fixed per-dispatch cost (jit launch, host↔device
+        round-trip) that dominates small partitions, and is what lets the
+        planner's :meth:`estimate` stop routing tiny dispatches to a backend
+        whose per-row throughput only wins at scale.  When the sample set has
+        no row-count spread (a single partition size) the affine system is
+        degenerate; the fit falls back to least squares through the origin
+        (Σ r·s / Σ r²), with zero overhead.  Negative intercepts (noise) are
+        clamped by refitting through the origin.  Returns the fitted
+        unit-cost map (also installed for :meth:`unit_cost`).
         """
         for key, samples in self._samples.items():
+            n = len(samples)
+            sr = sum(r for r, _ in samples)
             sr2 = sum(r * r for r, _ in samples)
             if sr2 <= 0:
                 continue
             srs = sum(r * s for r, s in samples)
-            self._backend_unit_cost[key] = max(srs / sr2, 1e-12)
+            ss = sum(s for _, s in samples)
+            det = n * sr2 - sr * sr
+            a = b = None
+            if n >= 2 and det > 1e-9 * n * sr2:  # genuine row-count spread
+                a = (n * srs - sr * ss) / det
+                b = (sr2 * ss - sr * srs) / det
+            if a is None or a <= 0 or b < 0:
+                a, b = srs / sr2, 0.0
+            self._backend_unit_cost[key] = max(a, 1e-12)
+            self._backend_overhead[key] = max(b, 0.0)
         self._samples_since_calibrate = 0
         self.version += 1
         return dict(self._backend_unit_cost)
@@ -255,11 +317,17 @@ class CostModel:
         state) as JSON, so a fresh session starts from calibrated estimates
         instead of the static defaults."""
         payload = {
-            "version": 1,
+            "version": 2,
             "unit_costs": {
                 f"{op}|{bk}": cost
                 for (op, bk), cost in sorted(self._backend_unit_cost.items())
             },
+            "overheads": {
+                f"{op}|{bk}": ovh
+                for (op, bk), ovh in sorted(self._backend_overhead.items())
+                if ovh > 0.0
+            },
+            "planner_decisions": dict(sorted(self.planner_decisions.items())),
             "op_ewma": {
                 op: {"unit_cost": st.unit_cost, "n_obs": st.n_obs}
                 for op, st in sorted(self._stats.items())
@@ -292,11 +360,22 @@ class CostModel:
         try:
             with open(path) as f:
                 payload = json.load(f)
+            # rpartition: the backend never contains "|" but fused op keys do
+            # (e.g. "fused:filter|describe|xla" → op "fused:filter|describe")
             unit_costs = {}
             for key, cost in payload.get("unit_costs", {}).items():
-                op, _, bk = key.partition("|")
+                op, _, bk = key.rpartition("|")
                 if op and bk:
                     unit_costs[(op, bk)] = float(cost)
+            overheads = {}
+            for key, ovh in payload.get("overheads", {}).items():
+                op, _, bk = key.rpartition("|")
+                if op and bk:
+                    overheads[(op, bk)] = max(float(ovh), 0.0)
+            decisions = {
+                str(k): int(v)
+                for k, v in payload.get("planner_decisions", {}).items()
+            }
             op_ewma = {
                 op: _OpStats(
                     unit_cost=float(st["unit_cost"]), n_obs=int(st.get("n_obs", 1))
@@ -306,6 +385,9 @@ class CostModel:
         except (OSError, ValueError, TypeError, AttributeError, KeyError):
             return False
         self._backend_unit_cost.update(unit_costs)
+        self._backend_overhead.update(overheads)
+        for k, v in decisions.items():
+            self.planner_decisions[k] = self.planner_decisions.get(k, 0) + v
         self._stats.update(op_ewma)
         self.version += 1
         return True

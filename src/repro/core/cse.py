@@ -20,7 +20,7 @@ is safe).
 from __future__ import annotations
 
 from collections import deque
-from typing import Dict, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 from .dag import DAG, Node
 
@@ -62,7 +62,8 @@ def resolve(merged: Dict[int, int], nid: int) -> int:
 
 
 def intern_program(
-    dst: DAG, roots: Sequence[Node]
+    dst: DAG, roots: Sequence[Node],
+    observer: Optional[Callable[[Node, bool], None]] = None,
 ) -> Tuple[Dict[int, Node], int]:
     """Hash-cons a foreign program (the ancestor closure of ``roots``, from
     another DAG) into ``dst`` — cross-DAG CSE.
@@ -70,6 +71,12 @@ def intern_program(
     Nodes are re-added bottom-up through ``dst.add``, whose hash consing
     resolves any node structurally identical to an existing ``dst`` node
     (same op, literals, kwargs, and *interned* parents) to that node.
+
+    ``observer(dst_node, is_new)`` fires once per interned source node.
+    Interning bypasses ``Engine.add``, so without an observer the engine's
+    interaction-predictor / speculation hooks would never see multi-tenant
+    submissions — callers that care pass
+    ``Engine.observe_interned_node`` here.
 
     Returns ``(mapping, n_new)``: ``mapping[src_nid]`` is the corresponding
     ``dst`` node, and ``n_new`` is how many genuinely new nodes ``dst``
@@ -88,6 +95,7 @@ def intern_program(
     before = len(dst)
     # source nid order is topological by construction (DAG._insert)
     for n in sorted(closure.values(), key=lambda n: n.nid):
+        size_before = len(dst)
         mapping[n.nid] = dst.add(
             n.op,
             parents=[mapping[p.nid] for p in n.parents],
@@ -96,4 +104,6 @@ def intern_program(
             interaction=n.is_interaction,
             est_rows=n.est_rows,
         )
+        if observer is not None:
+            observer(mapping[n.nid], len(dst) > size_before)
     return mapping, len(dst) - before

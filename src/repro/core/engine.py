@@ -135,6 +135,7 @@ class Engine:
         batch_loss_frac: float = 0.1,  # batch duration ≤ this × predicted think
         cost_model_path: Optional[str] = None,  # persist fitted unit costs
         recalibrate_every: int = 64,  # real mode: refit costs every N samples
+        planner: bool = True,  # cost-based backend planning + chain fusion
         fault_plan: Optional[FaultPlan] = None,  # chaos harness (None: env)
         worker_ack_timeout_s: float = 60.0,  # pause-ack stall watchdog bound
     ):
@@ -152,6 +153,10 @@ class Engine:
         self.clock: Clock = VirtualClock() if mode == "sim" else RealClock()
         self.mode = mode
         self.kernel_backend = kernel_backend
+        # cost-based backend planning (frame/planner.py): demote dispatches
+        # to the cheaper backend by fitted estimate, fuse eligible linear
+        # chains.  The frame runtime reads this at install time.
+        self.planner_enabled = planner
         self.opportunistic = opportunistic
         self.partial_results = partial_results
         self.registry = Registry()
@@ -223,6 +228,22 @@ class Engine:
     def register_op(self, op: str, impl: OpRuntime) -> None:
         self.registry.register(op, impl)
 
+    def observe_interned_node(self, node: Node, is_new: bool) -> None:
+        """Observation hook for nodes interned via ``cse.intern_program``.
+
+        Interning bypasses :meth:`add`, so without this hook the interaction
+        predictor's transition counts and the speculation manager never see
+        multi-tenant submissions — the speculation blind spot.  Callers pass
+        this as ``intern_program(..., observer=engine.observe_interned_node)``;
+        it mirrors exactly the new-node block of :meth:`add`."""
+        if not is_new:
+            return
+        with self._lock:
+            if self.predictor is not None and self._last_op is not None:
+                self.predictor.observe_transition(self._last_op, node.op)
+            self._last_op = node.op
+            self.speculation.on_node_submitted(node)
+
     # ----------------------------------------------------------- materialise --
     def value_of(self, node: Node) -> Any:
         """Materialise a node synchronously (no preemption)."""
@@ -244,6 +265,15 @@ class Engine:
                 "dropped corrupted cached result for %s; recomputing", node.label
             )
         impl = self.registry[node.op]
+        if impl.try_fused is not None and budget_s is None:
+            # planner fusion hook: lower filter→reduce chains as one dispatch
+            # (foreground only — background think-time execution keeps the
+            # per-unit preemption granularity)
+            value = impl.try_fused(node, self._ensure)
+            if value is not None:
+                self.cache.put(node, value)
+                self._record_rows(node, value)
+                return value
         inputs = []
         pinned = []
         try:

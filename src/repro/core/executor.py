@@ -106,6 +106,14 @@ class OpRuntime:
         Callable[["Node", Sequence[Any], List[Unit], List[int], int],
                  Optional[List["UnitBatch"]]]
     ] = None
+    # optional fused lowering: try_fused(node, ensure) -> final value, or None
+    # to run the normal unit path.  ``ensure`` materialises a DAG node (the
+    # engine passes its own _ensure).  The frame layer uses this to lower
+    # planner-detected linear chains (filter→stats, filter→groupby,
+    # filter→topk) as one kernel dispatch (see frame/planner.py).
+    try_fused: Optional[
+        Callable[["Node", Callable[["Node"], Any]], Optional[Any]]
+    ] = None
 
 
 @dataclass

@@ -99,6 +99,24 @@ class BackendPolicy:
                 return _check(cand)
         return "numpy"
 
+    def resolve_tier(self, override: Optional[str] = None) -> Tuple[str, str]:
+        """``resolve()`` plus WHICH precedence tier answered.
+
+        The cost-based planner (``frame/planner.py``) only governs the two
+        weakest tiers — ``"engine"`` (the engine's configured default) and
+        ``"default"`` (nothing configured) — so an explicit per-call /
+        ``use_backend`` / env override stays an absolute instruction and
+        bypasses planning entirely."""
+        for cand, tier in (
+            (override, "call"),
+            (_GLOBAL, "global"),
+            (os.environ.get(ENV_VAR), "env"),
+            (self.engine_default, "engine"),
+        ):
+            if cand:
+                return _check(cand), tier
+        return "numpy", "default"
+
 
 _DEFAULT_POLICY = BackendPolicy()
 
@@ -1213,3 +1231,169 @@ def select_rows(
         return Partition(new_cols, list(part.order))
 
     return _guarded("filter", bk, _run, lambda: part.select_rows(keep))
+
+
+# --------------------------------------------------------------------------- #
+# Fused composites: filter→reduce chains as ONE guarded kernel dispatch        #
+#                                                                              #
+# Partition-level entry points for the planner's fusion path                   #
+# (``FrameRuntime``'s try_fused hooks): each takes the UNFILTERED partition    #
+# plus the host-evaluated keep mask and runs compact+reduce inside a single    #
+# jit (kernels.ops.filter_then_*), skipping the intermediate filtered          #
+# partition entirely.  Each returns ``None`` when fusion is not eligible for   #
+# this partition — the caller then falls back to the unfused two-dispatch      #
+# sequence, so every gate here mirrors the corresponding unfused gate and the  #
+# fused result is equal (to signed zero) to the unfused one by construction    #
+# (see the parity contract in kernels/ops.py and tests/test_fused.py).         #
+#                                                                              #
+# Zero kept rows always declines: the numpy reference owns the empty-          #
+# partition semantics on the unfused path, and parity is trivial there.        #
+# --------------------------------------------------------------------------- #
+
+
+def fused_stats_partition(
+    part: Partition,
+    keep: np.ndarray,
+    cols: Optional[Sequence[str]] = None,
+    backend: Optional[str] = None,
+) -> Optional[Dict[str, ColStats]]:
+    """Fused filter→describe partial: masked stats over the kept rows only."""
+    bk = active_backend(backend)
+    names = list(cols) if cols is not None else B.numeric_columns(part)
+    if bk == "numpy" or not names or part.nrows == 0:
+        return None
+    keep = np.asarray(keep, bool)
+    if not keep.any():
+        return None
+
+    def _run():
+        xs, ms = _dev_stats_stack(part, names)
+        with _kernel(bk):
+            raw = np.asarray(
+                ops.filter_then_masked_stats(xs, ms, keep), np.float64
+            )
+        return _stats_from_raw(names, raw)
+
+    return _guarded("fused_stats", bk, _run, lambda: None)
+
+
+def _fused_groupby_plan(part: Partition, by: str, aggs) -> tuple:
+    """``_groupby_plan`` twin for the fused filter→groupby path: validity
+    rows dedup by agg column *name* instead of mask identity.  Filtering
+    materialises a fresh mask array per column, so on the filtered partition
+    two aggs share a validity row exactly when they read the same column —
+    deduping the parent's plan by name reproduces that structure (same
+    modes / valid_idx / per-agg rows), which keeps the fused kernel's plan
+    identical to the one the unfused sequence would run."""
+    key_col = part.columns[by]
+    kvalid = _dev_valid(key_col)
+    values: list = []
+    modes: list = []
+    valid_idx: list = []
+    valids: list = [kvalid]  # row 0: key presence
+    valid_row_of: Dict[str, int] = {}
+    agg_plan: list = []  # (out_name, fn, value_row | None, valid_row)
+    for out_name, col, fn in aggs:
+        vcol = part.columns[col]
+        if vcol.mask is None:
+            vrow = 0
+        else:
+            vrow = valid_row_of.get(col)
+            if vrow is None:
+                vrow = len(valids)
+                valids.append(kvalid & _dev_valid(vcol))
+                valid_row_of[col] = vrow
+        if fn == "count":
+            agg_plan.append((out_name, fn, None, vrow))
+            continue
+        values.append(_dev_f32(vcol))
+        modes.append(_SEG_MODE[fn])
+        valid_idx.append(vrow)
+        agg_plan.append((out_name, fn, len(values) - 1, vrow))
+    return _dev_i32(key_col), values, valids, modes, valid_idx, agg_plan
+
+
+def fused_groupby_partition(
+    part: Partition,
+    keep: np.ndarray,
+    by: str,
+    aggs: Sequence[Tuple[str, str, Any]],
+    topk_keys: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> Optional[dict]:
+    """Fused filter→groupby partial: segment reductions over kept rows."""
+    bk = active_backend(backend)
+    if bk == "numpy" or not _groupby_supported(part, by, aggs, topk_keys):
+        return None
+    key_col = part.columns[by]
+    nb = len(key_col.dictionary)
+    if nb >= 1 << 24:
+        return None  # group codes ride the fused kernel's f32 compaction
+    keep = np.asarray(keep, bool)
+    if not keep.any():
+        return None
+
+    def _run():
+        keys, values, valids, modes, valid_idx, agg_plan = _fused_groupby_plan(
+            part, by, aggs
+        )
+        with _kernel(bk):
+            reds, cnts = ops.filter_then_segment_reduce(
+                keys, values, valids, keep, nb, modes, valid_idx
+            )
+        return _groupby_from_raw(key_col.data.dtype, agg_plan, reds, cnts)
+
+    return _guarded("fused_groupby", bk, _run, lambda: None)
+
+
+def fused_topk_partition(
+    part: Partition,
+    keep: np.ndarray,
+    by: str,
+    ascending: bool,
+    limit: Optional[int],
+    n_samples: int = 32,
+    backend: Optional[str] = None,
+) -> Optional[Tuple[Partition, np.ndarray]]:
+    """Fused filter→topk partial: winners from the masked parent keys, final
+    rows gathered straight from the parent partition (identical math to
+    ``_limit_select``, expressed in kept-row coordinates)."""
+    bk = active_backend(backend)
+    key_col = part.columns.get(by)
+    if bk == "numpy" or key_col is None or limit is None or part.nrows == 0:
+        return None
+    if not (1 <= limit <= TOPK_MAX_K) or key_col.is_string:
+        return None
+    keep = np.asarray(keep, bool)
+    kept_idx = np.nonzero(keep)[0]
+    if len(kept_idx) <= limit:
+        return None  # the unfused path host-sorts this tiny case anyway
+    keys = _sort_keys(key_col, ascending)  # parent-row key space
+    kkeys = keys[kept_idx]
+    if np.isnan(kkeys).any():
+        return None  # NaN poisons the top_k threshold (see _partial_sort_limit)
+    kf32 = keys.astype(np.float32)
+
+    def _run():
+        with _kernel(bk):
+            winners = np.asarray(
+                ops.topk_masked_padded(kf32, keep, limit, largest=not ascending)
+            )
+        kth = winners[-1]
+        kk32 = kf32[kept_idx]
+        cand = np.nonzero(kk32 <= kth if ascending else kk32 >= kth)[0]
+        order_local = np.argsort(
+            kkeys[cand] if ascending else -kkeys[cand], kind="stable"
+        )
+        idx_local = cand[order_local][:limit]
+        sorted_part = part.take(kept_idx[idx_local])
+        skeys = kkeys[idx_local]
+        if len(skeys) == 0:
+            samples = np.array([])
+        else:
+            samples = skeys[
+                np.linspace(0, len(skeys) - 1, min(n_samples, len(skeys))).astype(int)
+            ]
+        return sorted_part, samples
+
+    return _guarded("fused_topk", bk, _run, lambda: None)

@@ -21,8 +21,15 @@ from . import blocking as B
 from .backend import BackendPolicy
 from .exprs import eval_expr, predicate_mask
 from .io import Catalog
+from .planner import Planner, planner_key
 from .schema import SchemaUnknown, infer_schema
 from .table import Column, Partition, PTable
+
+# filter-family ops whose output a fused chain can consume (they all reduce
+# to a host keep-mask + row compaction, so the compaction can move into the
+# downstream kernel); filters with a value_ref extra parent are excluded by
+# the single-parent chain gate in _try_fused
+_FUSABLE_FILTER_OPS = ("filter", "filter_cmp", "isin", "between", "dropna")
 
 
 class ColumnsResult(list):
@@ -41,6 +48,11 @@ class FrameRuntime:
         self.backend_policy = BackendPolicy(
             engine_default=getattr(engine, "kernel_backend", None)
         )
+        self.planner = Planner(
+            self.cost_model,
+            board=BK.breaker_board(),
+            enabled=getattr(engine, "planner_enabled", True),
+        )
         self._register_all()
 
     # ------------------------------------------------------------- helpers --
@@ -51,22 +63,36 @@ class FrameRuntime:
         """The columnar kernel backend for this runtime's blocking partials."""
         return self.backend_policy.resolve()
 
+    def _planned_backend(self, key: str, rows: int) -> str:
+        """Precedence resolution with the cost-based planner layered under
+        it: an explicit per-call / global / env override is absolute, but at
+        the ``engine`` / ``default`` tiers the planner may demote this
+        dispatch to numpy when the fitted (or cold-start) estimates say the
+        kernel loses at this row count (see ``frame/planner.py``)."""
+        bk, tier = self.backend_policy.resolve_tier()
+        if tier in ("engine", "default"):
+            bk = self.planner.choose(key, rows, bk)
+        return bk
+
     def _timed(self, node: Node, rows: int, fn: Callable[[str], Any]) -> Callable[[], Any]:
-        """Wrap a partial-unit body: resolve the backend at execution time,
-        measure wall time, and feed the sample to cost-model calibration.
+        """Wrap a partial-unit body: resolve the backend (planner included)
+        at execution time, measure wall time, and feed the sample to
+        cost-model calibration under the node's *planning key* — so the
+        samples keep refining exactly the estimates the planner consults.
         The sample is labelled with the backend that actually *served* the
         dispatch — when the runtime guard falls back to numpy (kernel error,
         open breaker) the time must calibrate the numpy path, or a single
         kernel failure would permanently skew the kernel's fitted cost."""
+        key = planner_key(node)
 
         def run():
-            bk = self.backend_policy.resolve()
+            bk = self._planned_backend(key, rows)
             BK.note_reset()
             t0 = time.perf_counter()
             out = fn(bk)
             dt = time.perf_counter() - t0
             served, _reason = BK.served_backend(bk)
-            self.cost_model.add_sample(node.op, served, rows, dt)
+            self.cost_model.add_sample(key, served, rows, dt)
             return out
 
         return run
@@ -96,10 +122,22 @@ class FrameRuntime:
 
         def make_batches(node, inputs, units, indices, max_batch):
             parent = inputs[0]
-            bk = self.backend_policy.resolve()
+            bk, tier = self.backend_policy.resolve_tier()
             if bk == "numpy" or max_batch < 2:
                 return None
             parts = parent.partitions
+            if tier in ("engine", "default"):
+                # planner consistency: batch only the partitions the unit
+                # path would dispatch to this kernel backend — demoted
+                # partitions stay uncovered and run unit-at-a-time, where
+                # _timed re-derives the identical numpy decision
+                key = planner_key(node)
+                indices = [
+                    i for i in indices
+                    if self.planner.choose(key, parts[i].nrows, bk) == bk
+                ]
+                if not indices:
+                    return None
             batches: List[UnitBatch] = []
             last_block_end: List[float] = [float("-inf")]  # shared across node's batches
 
@@ -132,7 +170,9 @@ class FrameRuntime:
                     now = time.perf_counter()
                     start = max(_t[0], last_block_end[0])
                     last_block_end[0] = now
-                    self.cost_model.add_sample(node.op, _bk, _rows, now - start)
+                    self.cost_model.add_sample(
+                        planner_key(node), _bk, _rows, now - start
+                    )
                     return out
 
                 batches.append(
@@ -275,7 +315,9 @@ class FrameRuntime:
 
         def filter_apply(node: Node, part: Partition, extras) -> Partition:
             keep = predicate_mask(filter_expr(node), part, extras)
-            return BK.select_rows(part, keep, backend=self.backend())
+            return self._timed(
+                node, part.nrows, lambda bk: BK.select_rows(part, keep, backend=bk)
+            )()
 
         def project_apply(node: Node, part: Partition, extras) -> Partition:
             return part.project(node.kwargs["cols"])
@@ -312,9 +354,10 @@ class FrameRuntime:
             return keep
 
         def dropna_apply(node: Node, part: Partition, extras) -> Partition:
-            return BK.select_rows(
-                part, dropna_keep(node, part), backend=self.backend()
-            )
+            keep = dropna_keep(node, part)
+            return self._timed(
+                node, part.nrows, lambda bk: BK.select_rows(part, keep, backend=bk)
+            )()
 
         def join_apply(node: Node, part: Partition, extras) -> Partition:
             right: PTable = extras[0]
@@ -341,6 +384,12 @@ class FrameRuntime:
             return BK.plan_select_rows_batch(
                 group, lambda: [dropna_keep(node, p) for p in group], backend=bk
             )
+
+        # exposed for the fusion driver (_try_fused): fused chains re-derive
+        # the filter's keep mask from the filter node against the *parent*
+        # partitions, so mask semantics must be shared, not duplicated
+        self._filter_expr = filter_expr
+        self._dropna_keep = dropna_keep
 
         eng.register_op("filter", make_pw(filter_apply, filter_batch_planner))
         eng.register_op("filter_cmp", make_pw(filter_apply, filter_batch_planner))
@@ -420,6 +469,7 @@ class FrameRuntime:
                 units=stats_units,
                 combine=lambda n, i, r: B.stats_to_table(B.merge_stats(r)),
                 make_batches=stats_batches,
+                try_fused=self._try_fused,
             ),
         )
         eng.register_op(
@@ -428,6 +478,7 @@ class FrameRuntime:
                 units=stats_units,
                 combine=lambda n, i, r: B.means_to_table(B.merge_stats(r)),
                 make_batches=stats_batches,
+                try_fused=self._try_fused,
             ),
         )
 
@@ -442,6 +493,7 @@ class FrameRuntime:
                 units=stats_units,
                 combine=mean_scalar_combine,
                 make_batches=stats_batches,
+                try_fused=self._try_fused,
             ),
         )
 
@@ -523,6 +575,7 @@ class FrameRuntime:
                         backend=bk,
                     )
                 ),
+                try_fused=self._try_fused,
             ),
         )
 
@@ -570,6 +623,7 @@ class FrameRuntime:
                         backend=bk,
                     )
                 ),
+                try_fused=self._try_fused,
             ),
         )
 
@@ -608,6 +662,109 @@ class FrameRuntime:
             "synthetic",
             OpRuntime(units=synth_units, combine=lambda n, i, r: len(r)),
         )
+
+    # ---- planner fusion: filter→reduce chains as one dispatch ----------------
+    def _fuse_keep(self, fnode: Node, part: Partition) -> np.ndarray:
+        """The filter node's keep mask on one *parent* partition — the same
+        mask the unfused filter dispatch would compute (shared helpers, so
+        the two paths cannot diverge)."""
+        if fnode.op == "dropna":
+            return np.asarray(self._dropna_keep(fnode, part), bool)
+        return np.asarray(
+            predicate_mask(self._filter_expr(fnode), part, []), bool
+        )
+
+    def _fused_partial_fns(self, node: Node, key: str):
+        """``(fused_fn, unfused_fn)`` for ops with a fused lowering, else
+        None.  ``fused_fn(part, keep, bk)`` runs the one-dispatch composite
+        on the unfiltered partition (None = partition outside the fused
+        envelope); ``unfused_fn(filtered, bk)`` is the per-partition unfused
+        second stage used as the in-chain fallback."""
+        if key == "describe":  # describe / mean / mean_scalar share the unit
+            return (
+                lambda p, keep, bk: BK.fused_stats_partition(p, keep, backend=bk),
+                lambda p, bk: BK.partial_stats(p, backend=bk),
+            )
+        if key == "groupby_agg" and node.kwargs.get("topk") is None:
+            by, aggs = node.kwargs["by"], node.kwargs["aggs"]
+            return (
+                lambda p, keep, bk: BK.fused_groupby_partition(
+                    p, keep, by, aggs, backend=bk
+                ),
+                lambda p, bk: BK.partial_groupby(p, by, aggs, None, backend=bk),
+            )
+        if key == "sort_values:topk":
+            by = node.kwargs["by"]
+            asc = node.kwargs.get("ascending", True)
+            limit = node.kwargs.get("limit")
+            return (
+                lambda p, keep, bk: BK.fused_topk_partition(
+                    p, keep, by, asc, limit, backend=bk
+                ),
+                lambda p, bk: BK.partial_sort(p, by, asc, limit, backend=bk),
+            )
+        return None
+
+    def _try_fused(self, node: Node, ensure) -> Optional[Any]:
+        """Engine ``try_fused`` hook: lower filter→``node`` as one fused
+        dispatch chain when the planner's estimates favour it.
+
+        Eligibility (the linear-chain rule): ``node``'s single parent is an
+        uncached filter-family node with a single parent of its own, whose
+        output feeds ONLY this node; the backend resolves at a
+        planner-governed tier; and the fused estimate beats the summed
+        unfused estimates.  Returns the combined value, or None to run the
+        normal unfused path."""
+        eng = self.engine
+        planner = self.planner
+        if not (planner.enabled and planner.fusion):
+            return None
+        if len(node.parents) != 1:
+            return None
+        fnode = node.parents[0]
+        if fnode.op not in _FUSABLE_FILTER_OPS or len(fnode.parents) != 1:
+            return None
+        if fnode.nid in eng.cache or fnode.nid in eng.partials:
+            return None  # the filter already (partially) ran: fusing wastes it
+        if len(eng.dag.children(fnode)) != 1:
+            return None  # shared filter output: materialising it pays off
+        bk, tier = self.backend_policy.resolve_tier()
+        if bk == "numpy" or tier not in ("engine", "default"):
+            return None
+        key = planner_key(node)
+        fns = self._fused_partial_fns(node, key)
+        if fns is None:
+            return None
+        fused_key = f"fused:filter|{key}"
+        parent_table = ensure(fnode.parents[0])
+        if not isinstance(parent_table, PTable):
+            return None
+        rows = sum(p.nrows for p in parent_table.partitions)
+        if not planner.choose_fusion(fused_key, bk, rows, ["filter", key]):
+            return None
+        fused_fn, unfused_fn = fns
+        results: List[Any] = []
+        t0 = time.perf_counter()
+        for part in parent_table.partitions:
+            keep = self._fuse_keep(fnode, part)
+            out = fused_fn(part, keep, bk)
+            if out is None:
+                # this partition sits outside the fused envelope (empty keep,
+                # unsupported column, runtime kernel failure): run the plain
+                # two-step sequence for it — identical result by definition
+                filtered = BK.select_rows(
+                    part, keep,
+                    backend=self._planned_backend("filter", part.nrows),
+                )
+                out = unfused_fn(filtered, bk)
+            results.append(out)
+        # the fused samples calibrate the fused key itself, so the
+        # fuse/don't-fuse decision keeps tracking measured reality
+        self.cost_model.add_sample(fused_key, bk, rows, time.perf_counter() - t0)
+        est = planner.estimate(fused_key, bk, rows)
+        if est is not None:
+            eng.clock.advance(est)
+        return eng.registry[node.op].combine(node, [parent_table], results)
 
     # ---- interaction fast paths (paper Fig. 2b, §5.1) -----------------------------
     def _fast_head(self, node: Node) -> Optional[Any]:

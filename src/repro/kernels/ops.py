@@ -202,7 +202,18 @@ def masked_stats_batch(xs, ms) -> jnp.ndarray:
         ms = jnp.pad(ms, ((0, 0), (0, nb - n)), constant_values=False)
     b = backend()
     if b == "xla":
-        return _masked_stats_batch_xla(xs, ms, min(_TILE, nb))
+        # Fixed-_TILE tiles regardless of bucket: every scan step reduces
+        # exactly _TILE elements, so the result is invariant to how far the
+        # input was padded (extra all-masked tiles are exact-neutral:
+        # +0.0 for sums, ±inf for min/max).  The fused filter→stats
+        # composites rely on this for bit-for-bit parity with the unfused
+        # sequence — their reduce runs at the *parent* partition's bucket
+        # while the unfused stats stage runs at the filtered bucket.
+        if nb < _TILE:
+            xs = jnp.pad(xs, ((0, 0), (0, _TILE - nb)))
+            ms = jnp.pad(ms, ((0, 0), (0, _TILE - nb)), constant_values=False)
+            nb = _TILE
+        return _masked_stats_batch_xla(xs, ms, _TILE)
     interp = b == "interpret"
     return jnp.stack([_stats_pallas(xs[i], ms[i], interpret=interp) for i in range(c)])
 
@@ -460,10 +471,23 @@ def segment_reduce_batch(
     b = backend()
     if b == "xla":
         # exact bucket count: the GEMM width is the dominant cost and XLA
-        # needs no lane alignment (the pallas path below keeps 128-rounding)
+        # needs no lane alignment (the pallas path below keeps 128-rounding).
+        # Row length pads to a fixed-_TILE tile for the same bucket-invariance
+        # reason as masked_stats_batch: padded rows (key 0, valid False) are
+        # exact-neutral in the one-hot GEMM and min/max selects, so the fused
+        # filter→groupby composite (which reduces at the parent's bucket)
+        # stays bit-for-bit with this unfused path (filtered bucket).
+        if nb < _TILE:
+            pad = _TILE - nb
+            keys = jnp.pad(keys, (0, pad))
+            values = tuple(jnp.pad(v, (0, pad)) for v in values)
+            valids = tuple(
+                jnp.pad(m, (0, pad), constant_values=False) for m in valids
+            )
+            nb = _TILE
         reds, cnts = _segment_batch_xla(
             keys, values, valids, int(num_buckets),
-            tuple(modes), tuple(int(i) for i in valid_idx), min(_TILE, nb),
+            tuple(modes), tuple(int(i) for i in valid_idx), _TILE,
         )
         return reds, cnts
     nbuckets = max(128, -(-int(num_buckets) // 128) * 128)
@@ -561,9 +585,15 @@ def segment_reduce_batch_parts(
         for v in range(V)
     )
     if backend() == "xla":
+        # mirror segment_reduce_batch's fixed-_TILE widening (parity)
+        if nb < _TILE:
+            pad = ((0, 0), (0, _TILE - nb))
+            keys = jnp.pad(keys, pad)
+            values = tuple(jnp.pad(v, pad) for v in values)
+            valids = tuple(jnp.pad(m, pad, constant_values=False) for m in valids)
         return _segment_parts_xla(
             keys, values, valids, int(num_buckets),
-            tuple(modes), tuple(int(i) for i in valid_idx), min(_TILE, nb),
+            tuple(modes), tuple(int(i) for i in valid_idx), _TILE,
         )
     # pallas / interpret: no fused path yet — loop per partition (still one
     # call site; correctness-only backends on this container)
@@ -678,5 +708,186 @@ def masked_stats_batch_parts(
     xs = jnp.concatenate([jnp.asarray(x, jnp.float32) for x in xs_rows])
     ms = jnp.concatenate([jnp.asarray(m, bool) for m in ms_rows])
     if backend() == "xla" and xs.shape[1] == pad_len(xs.shape[1], minimum=1):
-        return _masked_stats_rows_map_xla(xs, ms, min(_TILE, xs.shape[1]))
+        # mirror masked_stats_batch's fixed-_TILE widening (parity)
+        if xs.shape[1] < _TILE:
+            pad = ((0, 0), (0, _TILE - xs.shape[1]))
+            xs = jnp.pad(xs, pad)
+            ms = jnp.pad(ms, pad, constant_values=False)
+        return _masked_stats_rows_map_xla(xs, ms, _TILE)
     return masked_stats_batch(xs, ms)
+
+
+# --------------------------------------------------------------------------- #
+# Fused composites: filter→reduce chains lowered as ONE jit'd dispatch         #
+#                                                                              #
+# The planner (`frame/planner.py`) detects linear chains where a filter's      #
+# output feeds exactly one reduction and lowers them here instead of           #
+# materialising the intermediate partition: the filtered rows never leave the  #
+# device (or, on CPU, never round-trip through host numpy between ops).        #
+#                                                                              #
+# Bit-for-bit contract vs the unfused sequence: each composite first STABLE-   #
+# COMPACTS the kept rows to the array prefix, then runs the very same tiled    #
+# reduce body the unfused second stage runs.  Compaction is pure data          #
+# movement — any algorithm producing the same permutation is byte-identical   #
+# — so the fused path uses the *fast* formulation: the kept-row indices come  #
+# from a host `np.flatnonzero` over the keep mask (which is host-resident     #
+# anyway, produced by predicate evaluation), and the jit body GATHERS rows    #
+# into prefix position.  On CPU XLA a gather is ~100× cheaper than the        #
+# equivalent 1M-row scatter, which is what makes the fused chain beat the     #
+# two-dispatch plan instead of losing to it.  Because both reduce paths use   #
+# fixed-_TILE tiles (see masked_stats_batch / segment_reduce_batch), the kept #
+# values occupy identical positions in identical-width tiles on both paths    #
+# and the trailing all-padding tiles are exact-neutral — so the fused result  #
+# equals the unfused result to the bit, not merely to tolerance.  Shapes stay #
+# inside the same power-of-two bucket universe (`pad_len`), so fusion adds no #
+# new compilation cache pressure.                                              #
+# --------------------------------------------------------------------------- #
+
+
+def _compact_gather_idx(keep, nb: int) -> np.ndarray:
+    """Host-side compaction index: ``idx[j]`` = source row of compacted slot
+    ``j`` (ascending, so the gather is stable), padded with ``nb`` (out of
+    range → the gather's fill value, i.e. the compaction's pad)."""
+    kept = np.flatnonzero(np.asarray(keep, bool))
+    idx = np.full(nb, nb, np.int32)
+    idx[: kept.size] = kept
+    return idx
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def _filter_stats_xla(
+    xs: jnp.ndarray, ms: jnp.ndarray, idx: jnp.ndarray, tile: int
+) -> jnp.ndarray:
+    def one(args):
+        x, m = args
+        xc = x.at[idx].get(mode="fill", fill_value=0.0)
+        mc = m.at[idx].get(mode="fill", fill_value=False)
+        return _stats_row_tiled(xc, mc, tile)
+
+    return jax.lax.map(one, (xs, ms))
+
+
+def filter_then_masked_stats(xs, ms, keep) -> jnp.ndarray:
+    """Fused filter→describe: (C, n) values + (C, n) validity + keep (host
+    bool mask over the first ≤ n rows) → (C, 5) rows of (count, sum, sumsq,
+    min, max) over the kept+valid entries.
+
+    Bit-for-bit equal to ``masked_stats_batch`` on the filtered partition
+    (i.e. compact first on the host, then reduce) — the compaction runs as
+    an in-jit gather instead, so the chain is one dispatch with no
+    intermediate materialisation."""
+    xs = jnp.asarray(xs, jnp.float32)
+    ms = jnp.asarray(ms, bool)
+    c, n = xs.shape
+    nb = pad_len(n)
+    if backend() == "xla":
+        nb = max(nb, _TILE)
+    idx = _compact_gather_idx(keep, nb)
+    if nb != n:
+        xs = jnp.pad(xs, ((0, 0), (0, nb - n)))
+        ms = jnp.pad(ms, ((0, 0), (0, nb - n)), constant_values=False)
+    if backend() == "xla":
+        return _filter_stats_xla(xs, ms, jnp.asarray(idx), _TILE)
+    # interpret / pallas: compact via the reference scatter math, reduce via
+    # the backend's own stats path (correctness-only backends here)
+    keep_dev = _pad1(jnp.asarray(np.asarray(keep, bool)), nb, False)
+    rows = []
+    for i in range(c):
+        xc, _ = ref.filter_compact_ref(xs[i], keep_dev, 0.0)
+        mc, _ = ref.filter_compact_ref(ms[i].astype(jnp.float32), keep_dev, 0.0)
+        rows.append((xc, mc > 0.5))
+    return masked_stats_batch(
+        jnp.stack([r[0] for r in rows]), jnp.stack([r[1] for r in rows])
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_buckets", "modes", "valid_idx", "tile")
+)
+def _filter_segment_xla(
+    keys: jnp.ndarray,  # i32[n] group codes
+    values: Tuple[jnp.ndarray, ...],
+    valids: Tuple[jnp.ndarray, ...],
+    idx: jnp.ndarray,
+    num_buckets: int,
+    modes: Tuple[str, ...],
+    valid_idx: Tuple[int, ...],
+    tile: int,
+):
+    keys_c = keys.at[idx].get(mode="fill", fill_value=0)
+    vals_c = tuple(v.at[idx].get(mode="fill", fill_value=0.0) for v in values)
+    mins_c = tuple(m.at[idx].get(mode="fill", fill_value=False) for m in valids)
+    return _segment_batch_body(
+        keys_c, vals_c, mins_c, num_buckets, modes, valid_idx, tile
+    )
+
+
+def filter_then_segment_reduce(
+    keys,
+    values: Sequence,
+    valids: Sequence,
+    keep,
+    num_buckets: int,
+    modes: Sequence[str],
+    valid_idx: Sequence[int],
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused filter→groupby: segment reductions over the kept rows only, in
+    one dispatch.  Same contract as ``segment_reduce_batch`` on the filtered
+    partition, bit-for-bit (stable gather compaction; padded rows carry key 0
+    with valid False, exact-neutral in the one-hot GEMM).  ``keep`` is the
+    host bool mask (see the section comment — the compaction indices are
+    computed host-side).
+
+    ``num_buckets`` bounds the one-hot GEMM width; callers gate it below
+    2**24 (beyond which the reduction matrix stops being a sane dispatch)."""
+    if int(num_buckets) >= 1 << 24:
+        raise ValueError("filter_then_segment_reduce: num_buckets too large (gate)")
+    keys = jnp.asarray(keys, jnp.int32)
+    n = keys.shape[0]
+    nb = pad_len(n)
+    if backend() == "xla":
+        nb = max(nb, _TILE)
+    idx = _compact_gather_idx(keep, nb)
+    keys = _pad1(keys, nb, 0)
+    values = tuple(_pad1(jnp.asarray(v, jnp.float32), nb, 0.0) for v in values)
+    valids = tuple(_pad1(jnp.asarray(m, bool), nb, False) for m in valids)
+    if backend() == "xla":
+        return _filter_segment_xla(
+            keys, values, valids, jnp.asarray(idx), int(num_buckets),
+            tuple(modes), tuple(int(i) for i in valid_idx), _TILE,
+        )
+    keep_dev = _pad1(jnp.asarray(np.asarray(keep, bool)), nb, False)
+    keys_c = ref.filter_compact_ref(keys.astype(jnp.float32), keep_dev, 0.0)[0]
+    vals_c = [ref.filter_compact_ref(v, keep_dev, 0.0)[0] for v in values]
+    mins_c = [
+        ref.filter_compact_ref(m.astype(jnp.float32), keep_dev, 0.0)[0] > 0.5
+        for m in valids
+    ]
+    return segment_reduce_batch(
+        keys_c.astype(jnp.int32), vals_c, mins_c, num_buckets, modes, valid_idx
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "largest"))
+def _topk_masked_xla(
+    x: jnp.ndarray, keep: jnp.ndarray, k: int, largest: bool
+) -> jnp.ndarray:
+    sentinel = -jnp.inf if largest else jnp.inf
+    return _topk_body(jnp.where(keep, x, sentinel), k, largest)
+
+
+def topk_masked_padded(x, keep, k: int, largest: bool = True) -> jnp.ndarray:
+    """Fused filter→topk winner values: ``topk`` restricted to kept rows,
+    without compacting — masked-out rows take the losing sentinel inside the
+    jit.  ``lax.top_k`` returns *values*, so the result equals
+    ``topk_padded`` on the compacted kept rows exactly (same value multiset,
+    sentinels lose; callers gate kept-count > k so no sentinel wins)."""
+    x = jnp.asarray(x, jnp.float32)
+    keep = jnp.asarray(keep, bool)
+    nb = pad_len(x.shape[0])
+    sentinel = -jnp.inf if largest else jnp.inf
+    xp = _pad1(x, nb, sentinel)
+    kp = _pad1(keep, nb, False)
+    if backend() == "xla":
+        return _topk_masked_xla(xp, kp, k, largest)
+    return topk(jnp.where(kp, xp, sentinel), k, largest=largest)

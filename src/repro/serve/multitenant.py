@@ -159,7 +159,10 @@ class MultiTenantServer:
         added to the tenant's scheduler demand set."""
         if tenant not in self._demand:
             self.register(tenant)
-        mapping, n_new = intern_program(self.engine.dag, list(roots))
+        mapping, n_new = intern_program(
+            self.engine.dag, list(roots),
+            observer=self.engine.observe_interned_node,
+        )
         demand = self._demand.setdefault(tenant, set())
         for shared in mapping.values():
             self.engine.cache.subscribe(shared.nid, tenant)

@@ -287,3 +287,36 @@ def test_server_stats_surface():
     assert st["n_programs"] == 1
     assert st["per_tenant_interactions"]["t0"]["n_interactions"] == 1
     assert st["cache"]["tenant_bytes"]["t0"] > 0
+
+
+# ------------------------------------------------- intern-time observation --
+def test_submit_feeds_predictor_and_speculation():
+    """Multi-tenant submits bypass Engine.add, so without the intern-time
+    observer the interaction predictor and speculation manager would never
+    see them (the speculation blind spot).  submit() must mirror add()'s
+    observation block for every genuinely new interned node — and stay
+    silent for deduped resubmissions."""
+    from repro.core.predictor import InteractionPredictor
+
+    pred = InteractionPredictor()
+    eng = Engine(mode="sim", budget_bytes=1 << 20, speculation=False, predictor=pred)
+    register_synthetic_op(eng)
+    srv = MultiTenantServer(eng)
+
+    def transitions():
+        return sum(sum(c.values()) for c in pred._next_counts.values())
+
+    assert transitions() == 0
+    _, root = synthetic_trace_program(1, 0)  # 4-node chain: 3 transitions
+    srv.submit("alice", [root])
+    assert transitions() == 3
+    # structurally identical resubmission dedups fully: no new nodes, so no
+    # phantom transition counts
+    _, root2 = synthetic_trace_program(1, 0)
+    srv.submit("bob", [root2])
+    assert transitions() == 3
+    # a fresh program's new nodes are observed again (including the add-path
+    # interleaving: _last_op carries across intern and add)
+    _, root3 = synthetic_trace_program(2, 1)
+    srv.submit("alice", [root3])
+    assert transitions() == 6  # source deduped, 3 new stage nodes observed
