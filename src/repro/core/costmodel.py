@@ -12,6 +12,7 @@ agnostic, it just learns from whatever ``observe`` feeds it.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 from dataclasses import dataclass, field
@@ -312,6 +313,23 @@ class CostModel:
         return report
 
     # -- persistence (fitted costs survive across sessions) ----------------------
+    def state_fingerprint(self) -> str:
+        """Content hash of everything that can change cost()/unit_cost()
+        output: fitted per-backend costs and overheads, the per-op EWMA
+        state, and the active backend.  Floats are hashed via repr (shortest
+        round-trip), so two models agree iff their estimates are bit-equal —
+        the validity token for persisting cost-derived memos (see
+        Scheduler.save_memos/load_memos)."""
+        h = hashlib.blake2b(digest_size=16)
+        for (op, bk), cost in sorted(self._backend_unit_cost.items()):
+            h.update(f"u:{op}|{bk}={cost!r};".encode())
+        for (op, bk), ovh in sorted(self._backend_overhead.items()):
+            h.update(f"o:{op}|{bk}={ovh!r};".encode())
+        for op, st in sorted(self._stats.items()):
+            h.update(f"e:{op}={st.unit_cost!r},{st.n_obs};".encode())
+        h.update(f"b:{self.active_backend};a:{self.ewma_alpha!r}".encode())
+        return h.hexdigest()
+
     def save(self, path: str) -> None:
         """Dump the fitted per-(op, backend) unit costs (plus the per-op EWMA
         state) as JSON, so a fresh session starts from calibrated estimates

@@ -41,7 +41,8 @@ from .faults import FaultPlan
 
 logger = logging.getLogger("repro.engine")
 from .predictor import InteractionPredictor
-from .scheduler import Policy, Scheduler
+from .progressive import ProgressiveResult
+from .scheduler import Policy, Scheduler, sample_first_order
 from .slicing import critical_path, unexecuted_critical
 from .speculation import SpeculationManager
 from .thinktime import ThinkTimeModel
@@ -55,6 +56,9 @@ class InteractionRecord:
     partial: bool  # served via the head/tail partial-result path
     at: float
     tenant: Optional[str] = None  # multi-tenant serving attribution
+    # served as a progressive bounded estimate (latency_s is then the
+    # time-to-first-bounded-estimate, not time-to-exact)
+    progressive: bool = False
 
 
 @dataclass
@@ -138,6 +142,7 @@ class Engine:
         planner: bool = True,  # cost-based backend planning + chain fusion
         fault_plan: Optional[FaultPlan] = None,  # chaos harness (None: env)
         worker_ack_timeout_s: float = 60.0,  # pause-ack stall watchdog bound
+        scheduler_memo_path: Optional[str] = None,  # persist scheduler memos
     ):
         self.dag = DAG()
         self.cost_model = CostModel()
@@ -146,6 +151,12 @@ class Engine:
         self.batching = batching
         self.batch_loss_frac = batch_loss_frac
         self.cost_model_path = cost_model_path
+        # scheduler descendant/delivery-cost memos ride alongside the cost
+        # model file by default; loading is explicit (load_scheduler_memos)
+        # because the DAG fingerprint only matches once the program is rebuilt
+        self.scheduler_memo_path = scheduler_memo_path or (
+            f"{cost_model_path}.sched.json" if cost_model_path else None
+        )
         if cost_model_path:
             self.cost_model.load(cost_model_path)
         if mode == "real":
@@ -186,6 +197,10 @@ class Engine:
         self.executor = Executor(
             self.registry, self.clock, self.cost_model, fault_plan=self.faults
         )
+        # progressive refinement executes a spread of partitions before the
+        # rest; applied only to nodes with a progress listener, so the exact
+        # path's unit order is untouched
+        self.executor.unit_order = sample_first_order
         self.partials: Dict[int, PartialProgress] = {}
         self.speculation.partials = self.partials
         self.cache.on_evict = lambda node: self.scheduler.evicted_once.add(node.nid)
@@ -360,6 +375,146 @@ class Engine:
                 return value
         finally:
             self._resume_worker()
+
+    # ---- progressive interactions (bounded estimates, upgrade in place) ------
+    def interact(
+        self,
+        node: Node,
+        tenant: Optional[str] = None,
+        progressive: bool = False,
+        seed_units: Optional[int] = None,
+    ) -> Any:
+        """The interaction entry point.  ``progressive=False`` is exactly
+        :meth:`display` (blocking, exact).  ``progressive=True`` returns a
+        :class:`~repro.core.progressive.ProgressiveResult` immediately: a
+        bounded estimate over the partitions completed so far (seeding a
+        sample-first slice when none are) that upgrades in place as
+        background execution / explicit refinement completes partitions."""
+        if not progressive:
+            return self.display(node, tenant=tenant)
+        return self.display_progressive(node, tenant=tenant, seed_units=seed_units)
+
+    def display_progressive(
+        self,
+        node: Node,
+        tenant: Optional[str] = None,
+        seed_units: Optional[int] = None,
+    ) -> ProgressiveResult:
+        """Progressive interaction: return a bounded estimate immediately.
+
+        Mirrors :meth:`display`'s bookkeeping — think-time update, an
+        :class:`InteractionRecord` whose latency is the
+        time-to-first-bounded-estimate, speculation hooks — but instead of
+        materialising the node it wires a running combine into the executor's
+        streaming path and executes only a small sample-first seed of
+        partitions (``seed_units``, default total/16) when no partials exist
+        yet.  Parents ARE materialised (they're on the critical path of any
+        estimate); only the node's own partitions are progressive."""
+        node.is_interaction = True
+        self._pause_worker()
+        try:
+            with self._lock:
+                now = self.clock.now()
+                if self._last_output_at is not None:
+                    dt = now - self._last_output_at
+                    if dt > 0:
+                        self.think_time.update(dt)
+                        self.metrics.think_s += dt
+                t0 = self.clock.now()
+                n_exec_before = self.executor.stats.nodes_completed
+                impl = self.registry[node.op]
+                cached = self.cache.peek(node.nid)
+                if cached is not None and not faults.is_corrupt(cached):
+                    pr = ProgressiveResult(
+                        self, node, inputs=[], combine=None, total_units=0,
+                        tenant=tenant,
+                    )
+                else:
+                    inputs = (
+                        [self._ensure(p) for p in node.parents]
+                        if impl.needs_inputs
+                        else []
+                    )
+                    units = impl.units(node, inputs)
+                    prog = self.partials.get(node.nid)
+                    if prog is None or prog.total_units != len(units):
+                        prog = PartialProgress(total_units=len(units))
+                        self.partials[node.nid] = prog
+                    combine = (
+                        impl.running_combine(node, inputs)
+                        if impl.running_combine is not None
+                        else None
+                    )
+                    pr = ProgressiveResult(
+                        self, node, inputs=inputs, combine=combine,
+                        total_units=len(units), tenant=tenant,
+                    )
+                    pr._units = units
+                    # replay checkpointed partials, then stream the rest
+                    for i in sorted(prog.results):
+                        pr._on_unit(i, prog.results[i])
+                    self.executor.progress_listeners[node.nid] = pr._on_unit
+                    if pr.n_units == 0 and len(units) > 0:
+                        k = (
+                            seed_units
+                            if seed_units is not None
+                            else max(1, len(units) // 16)
+                        )
+                        self._progressive_step(pr, k)
+                latency = self.clock.now() - t0
+                self.metrics.sync_wait_s += latency
+                self.metrics.interactions.append(
+                    InteractionRecord(
+                        label=node.label,
+                        latency_s=latency,
+                        ops_executed=self.executor.stats.nodes_completed
+                        - n_exec_before,
+                        partial=True,
+                        at=self.clock.now(),
+                        tenant=tenant,
+                        progressive=True,
+                    )
+                )
+                self.speculation.on_critical_path_executed(
+                    critical_path(self.dag, node)
+                )
+                self._last_output_at = self.clock.now()
+                return pr
+        finally:
+            self._resume_worker()
+
+    def _progressive_step(self, pr: ProgressiveResult, max_units: int) -> None:
+        """Execute up to ``max_units`` missing partitions of ``pr.node`` in
+        sample-first order; finalise through the exact combine when the last
+        one lands.  Caller holds the engine lock (worker paused)."""
+        node = pr.node
+        if node.nid in self.cache:
+            return
+        prog = self.partials.get(node.nid)
+        if prog is None or prog.total_units != pr.total_units:
+            prog = PartialProgress(total_units=pr.total_units)
+            self.partials[node.nid] = prog
+        missing = prog.missing()
+        if missing:
+            order = sample_first_order(missing, prog.total_units or len(missing))
+            self.executor.run_units(
+                node, pr._inputs, self.partials,
+                order[: max(int(max_units), 1)], tenant=pr.tenant,
+                units=pr._units,
+            )
+        if prog.done:
+            self._progressive_finalize(pr)
+
+    def _progressive_finalize(self, pr: ProgressiveResult) -> None:
+        """All partitions done: combine through the executor's ordinary path
+        (unit results in index order — identical to the non-progressive
+        path, so the completed result is bit-for-bit exact) and cache it."""
+        node = pr.node
+        if node.nid in self.cache:
+            return
+        value = self.executor.execute(node, pr._inputs, self.partials)
+        self.cache.put(node, value)
+        self._record_rows(node, value)
 
     # ---- head/tail partial results (paper §2.2.2, §5.1) ----------------------
     def _try_partial_headtail(self, node: Node) -> Optional[Any]:
@@ -613,10 +768,28 @@ class Engine:
         self.save_cost_model()
 
     def save_cost_model(self) -> None:
-        """Persist fitted unit costs (no-op without ``cost_model_path``)."""
+        """Persist fitted unit costs (no-op without ``cost_model_path``),
+        plus the scheduler's descendant/delivery-cost memos alongside."""
         if self.cost_model_path:
             self.cost_model.calibrate()
             self.cost_model.save(self.cost_model_path)
+        self.save_scheduler_memos()
+
+    def save_scheduler_memos(self) -> None:
+        """Persist the scheduler's memo caches (no-op without a path)."""
+        if self.scheduler_memo_path:
+            with self._lock:
+                self.scheduler.save_memos(self.scheduler_memo_path)
+
+    def load_scheduler_memos(self) -> bool:
+        """Install persisted scheduler memos.  Call AFTER the session's DAG
+        is rebuilt — validity is keyed on a content fingerprint of the DAG
+        (and the cost-model state for the cost-derived memos), so loading
+        against a different program is rejected wholesale."""
+        if not self.scheduler_memo_path:
+            return False
+        with self._lock:
+            return self.scheduler.load_memos(self.scheduler_memo_path)
 
     def _pause_worker(self) -> None:
         if self._worker is not None:

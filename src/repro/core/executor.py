@@ -26,12 +26,15 @@ prefill steps).
 """
 from __future__ import annotations
 
+import logging
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from . import faults
 from .faults import CorruptResult
+
+_log = logging.getLogger(__name__)
 
 
 class Preempted(Exception):
@@ -114,6 +117,12 @@ class OpRuntime:
     try_fused: Optional[
         Callable[["Node", Callable[["Node"], Any]], Optional[Any]]
     ] = None
+    # optional progressive path: running_combine(node, inputs) -> a running
+    # combine state object (update(index, partial) / snapshot(coverage)) that
+    # folds completed unit results in as they stream out of the executor and
+    # can produce a bounded estimate at any coverage.  Ops without one still
+    # get a coverage-only ProgressiveResult (value None until complete).
+    running_combine: Optional[Callable[["Node", Sequence[Any]], Any]] = None
 
 
 @dataclass
@@ -186,6 +195,14 @@ class Executor:
         self.cost_model = cost_model
         self.fault_plan = fault_plan
         self.stats = ExecStats()
+        # progressive streaming: nid -> callback(unit_index, result), fired at
+        # every unit-result write site (unit loop, batch fill, run_units) so a
+        # ProgressiveResult sees partitions as they complete, not at 100%
+        self.progress_listeners: Dict[int, Callable[[int, Any], None]] = {}
+        # intra-node unit ordering hook (sample-first); applied ONLY to nodes
+        # with a registered progress listener so the exact path's execution
+        # order — and therefore its observable behaviour — is untouched
+        self.unit_order: Optional[Callable[[List[int], int], List[int]]] = None
 
     def execute(
         self,
@@ -252,6 +269,8 @@ class Executor:
         started = self.clock.now()
         spent = 0.0
         missing = [i for i in range(len(units)) if i not in prog.results]
+        if self.unit_order is not None and node.nid in self.progress_listeners:
+            missing = self.unit_order(missing, len(units))
         if batch_budget_s is not None and impl.make_batches is not None and missing:
             k = self._batch_size(units, missing, batch_budget_s)
             batches = (
@@ -283,8 +302,7 @@ class Executor:
             dur = unit.cost_s if self.clock.virtual else wall
             self.clock.advance(unit.cost_s)
             spent += dur
-            prog.results[i] = result
-            self.stats.units_run += 1
+            self._store_unit(node, prog, i, result)
 
         self._purge_corrupt(node, prog)
         if impl.combine_cost is not None:
@@ -297,7 +315,65 @@ class Executor:
         self.stats.seconds += total
         self.stats.nodes_completed += 1
         partials.pop(node.nid, None)
+        self.progress_listeners.pop(node.nid, None)
         return value
+
+    def _store_unit(self, node, prog: PartialProgress, i: int, result: Any) -> None:
+        """Single write site for completed unit results: fills the progress
+        slot, counts the unit, and streams the result to any progressive
+        listener.  Listener failures must never poison execution — the exact
+        path owes nothing to the estimate channel."""
+        prog.results[i] = result
+        self.stats.units_run += 1
+        cb = self.progress_listeners.get(node.nid)
+        if cb is not None:
+            try:
+                cb(i, result)
+            except Exception:  # pragma: no cover - defensive
+                _log.exception("progress listener for %s failed", node.label)
+
+    def run_units(
+        self,
+        node,
+        inputs: Sequence[Any],
+        partials: Dict[int, PartialProgress],
+        indices: Sequence[int],
+        tenant: Optional[str] = None,
+        units: Optional[List[Unit]] = None,
+    ) -> int:
+        """Execute exactly the given unit indices of ``node`` — no combine, no
+        completion bookkeeping.  This is the progressive-refinement quantum:
+        the caller picks a sample-first slice of the missing units, results
+        stream into :class:`PartialProgress` (and any progress listener) and
+        remain resumable by a later ``execute``.  Returns units completed.
+
+        ``units`` lets the caller reuse an already-built unit list (building
+        one closure per partition is O(partitions) even to run a single
+        unit, which would dominate small refinement quanta)."""
+        impl = self.registry[node.op]
+        if units is None:
+            units = impl.units(node, inputs)
+        prog = partials.get(node.nid)
+        if prog is None or prog.total_units != len(units):
+            prog = PartialProgress(total_units=len(units))
+            partials[node.nid] = prog
+        before = self.stats.units_run
+        with faults.scope(self.fault_plan):
+            for i in indices:
+                if i in prog.results:
+                    continue
+                mode = faults.fire("exec.unit", op=node.op)  # may raise / sleep
+                result = units[i].fn()
+                if mode == "corrupt":
+                    result = faults.corrupt(result)
+                self.clock.advance(units[i].cost_s)
+                self._store_unit(node, prog, i, result)
+        delta = self.stats.units_run - before
+        if tenant is not None and delta:
+            self.stats.units_by_tenant[tenant] = (
+                self.stats.units_by_tenant.get(tenant, 0) + delta
+            )
+        return delta
 
     @staticmethod
     def _purge_corrupt(node, prog: PartialProgress) -> None:
@@ -360,8 +436,7 @@ class Executor:
 
         def fill(batch: UnitBatch, results: List[Any]) -> None:
             for idx, res in zip(batch.indices, results):
-                prog.results[idx] = res
-            self.stats.units_run += len(batch)
+                self._store_unit(node, prog, idx, res)
             self.stats.batches_run += 1
             if len(batch) > 1:
                 self.stats.units_batched += len(batch)

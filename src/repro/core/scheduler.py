@@ -15,10 +15,13 @@ ablation benchmark (EXPERIMENTS.md §Ablations).
 """
 from __future__ import annotations
 
+import hashlib
+import json
 import math
+import os
 import random as _random
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterable, Optional, Sequence, Set, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from .costmodel import CostModel
 from .dag import DAG, Node
@@ -26,6 +29,37 @@ from .predictor import InteractionPredictor
 from .slicing import source_operators
 
 Policy = str  # "utility" | "utility_p" | "fifo" | "lifo" | "random" | "cheapest"
+
+
+def sample_first_order(missing: Sequence[int], total: int) -> List[int]:
+    """Intra-node unit ordering for progressive execution: a bit-reversal
+    (van der Corput base-2) permutation over partition indices.
+
+    Executing partitions in index order samples the table front-to-back —
+    terrible for a bounded estimate when the data has any positional drift
+    (time-ordered facts, clustered categories), because the covered prefix is
+    a *biased* sample until late.  Bit-reversal order visits an evenly-spread,
+    recursively-refining lattice (0, m/2, m/4, 3m/4, …): after k units the
+    covered set is close to a uniform systematic sample of the partitions, so
+    CLT variance estimates tighten at the fastest rate the coverage allows.
+
+    Deterministic, and a pure permutation of ``missing`` — resumed execution
+    (the exact path's ``execute``) still completes every unit, so completion
+    semantics are untouched.  This orders units *within* one node; node-level
+    ``pick()`` is a different axis and keeps its `reference_pick` parity.
+    """
+    if total <= 1 or len(missing) <= 1:
+        return list(missing)
+    bits = max((total - 1).bit_length(), 1)
+
+    def rev(i: int) -> int:
+        r = 0
+        for _ in range(bits):
+            r = (r << 1) | (i & 1)
+            i >>= 1
+        return r
+
+    return sorted(missing, key=lambda i: (rev(i), i))
 
 
 @dataclass
@@ -448,3 +482,102 @@ class Scheduler:
             return total
 
         return max(srcs, key=lambda n: (util(n), -n.nid))
+
+    # -- cross-session memo persistence ---------------------------------------------
+    # The descendant sets are pure DAG structure (the expensive O(V·E) walks a
+    # large notebook pays on its first pick) and the delivery/utility memos
+    # are floats valid for one exact (DAG, cost-model state, executed set)
+    # triple.  Both are persisted alongside CostModel.save/load, keyed by
+    # content fingerprints: a mismatched DAG rejects the whole file, a
+    # mismatched cost state installs structure only.  The in-session
+    # ``dag.version`` counter cannot identify a DAG across processes — the
+    # fingerprint below hashes the content (nid + node fingerprint) instead,
+    # which is what "invalidation on DAG-version mismatch" has to mean
+    # cross-session.
+
+    MEMO_FORMAT_VERSION = 1
+
+    def dag_fingerprint(self) -> str:
+        """Content identity of the scheduler's DAG: ordered (nid, node
+        fingerprint) pairs — stable across processes for identically-rebuilt
+        programs, unlike the in-memory ``dag.version`` counter."""
+        h = hashlib.blake2b(digest_size=16)
+        for n in self.dag.nodes:
+            h.update(f"{n.nid}:{n.fingerprint};".encode())
+        return h.hexdigest()
+
+    def save_memos(self, path: str) -> None:
+        """Persist the memo caches (crash-safe tmp+rename, like
+        CostModel.save).  Memos are synced to the current versions first so
+        the file never pairs stale floats with a fresh fingerprint."""
+        if self._memo_done is not None:
+            self._sync_caches(self._memo_done)
+        payload = {
+            "format_version": self.MEMO_FORMAT_VERSION,
+            "dag_fingerprint": self.dag_fingerprint(),
+            "cost_fingerprint": self.cost_model.state_fingerprint(),
+            "done": sorted(self._memo_done) if self._memo_done is not None else None,
+            "desc_ids": {str(k): sorted(v) for k, v in self._desc_ids.items()},
+            "delivery": {str(k): v for k, v in self._delivery_memo.items()},
+            "utility": {str(k): v for k, v in self._utility_memo.items()},
+            "demand": {str(k): bool(v) for k, v in self._demand_memo.items()},
+        }
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(payload, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def load_memos(self, path: str) -> bool:
+        """Install persisted memos; all-or-nothing per layer.
+
+        DAG fingerprint mismatch → reject the whole file (False).  On a match
+        the structure memos (descendant id sets) always install; the cost
+        memos additionally require the cost-model state fingerprint to match
+        and are installed together with the executed set they were computed
+        at — any done-set difference at the next pick() flows through the
+        normal ``_invalidate_cones`` delta, so surviving floats are
+        byte-identical to a from-scratch recompute (oracle parity holds by
+        construction)."""
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+            if payload.get("format_version") != self.MEMO_FORMAT_VERSION:
+                return False
+            if payload.get("dag_fingerprint") != self.dag_fingerprint():
+                return False
+            known = {n.nid for n in self.dag.nodes}
+            desc_ids = {
+                int(k): frozenset(v)
+                for k, v in payload.get("desc_ids", {}).items()
+                if int(k) in known and set(v) <= known
+            }
+            cost_ok = (
+                payload.get("cost_fingerprint") == self.cost_model.state_fingerprint()
+                and payload.get("done") is not None
+            )
+            if cost_ok:
+                done = frozenset(int(i) for i in payload["done"])
+                delivery = {int(k): float(v) for k, v in payload.get("delivery", {}).items()}
+                utility = {int(k): float(v) for k, v in payload.get("utility", {}).items()}
+                demand = {int(k): bool(v) for k, v in payload.get("demand", {}).items()}
+        except (OSError, ValueError, TypeError, AttributeError, KeyError):
+            return False
+        self._node_by_id = {n.nid: n for n in self.dag.nodes}
+        self._desc_ids.update(desc_ids)
+        self._dag_version = self.dag.version
+        if cost_ok:
+            self._delivery_memo = delivery
+            self._utility_memo = utility
+            self._demand_memo = demand
+            self._memo_done = done
+            self._cost_version = getattr(self.cost_model, "version", 0)
+        return True

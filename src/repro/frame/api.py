@@ -57,6 +57,18 @@ class Session:
             return x  # plain python value: nothing to execute
         return self.engine.display(node)
 
+    def interact(self, x: Any, progressive: bool = False, seed_units: Optional[int] = None) -> Any:
+        """Blocking interaction.  With ``progressive=True`` returns a
+        :class:`~repro.core.progressive.ProgressiveResult` immediately — a
+        bounded estimate over the completed partitions that upgrades in
+        place — instead of waiting for exact completion."""
+        node = _node_of(x)
+        if node is None:
+            return x
+        return self.engine.interact(
+            node, progressive=progressive, seed_units=seed_units
+        )
+
     def think(self, seconds: float) -> dict:
         return self.engine.think(seconds)
 

@@ -429,18 +429,22 @@ def _dev_stats_stack(part: Partition, names: Sequence[str]):
 
 
 def _stats_from_raw(names: Sequence[str], raw: np.ndarray) -> Dict[str, ColStats]:
-    """(C, 5) kernel rows of (count, sum, sumsq, min, max) → per-column
+    """(C, 5) kernel rows of (count, sum, m2, min, max) → per-column
     ColStats — the shared host postprocessing of the batched and unbatched
-    paths (bit-for-bit by construction)."""
+    paths (bit-for-bit by construction).  The kernels carry the centered
+    second moment directly (Chan's pairwise update), so no ss − s²/n
+    conversion happens here — that difference cancels catastrophically in
+    f32 once |mean| ≫ std."""
     out: Dict[str, ColStats] = {}
     for i, name in enumerate(names):
-        count, s, ss, mn, mx = raw[i]
+        count, s, m2, mn, mx = raw[i]
         if count == 0:
             out[name] = ColStats(0.0, 0.0, 0.0, np.inf, -np.inf)
         else:
             mean = s / count
-            m2 = max(ss - s * s / count, 0.0)
-            out[name] = ColStats(float(count), float(mean), float(m2), float(mn), float(mx))
+            out[name] = ColStats(
+                float(count), float(mean), float(max(m2, 0.0)), float(mn), float(mx)
+            )
     return out
 
 

@@ -9,6 +9,7 @@ limit-sorts).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -71,12 +72,28 @@ def partial_stats(part: Partition, cols: Optional[Sequence[str]] = None) -> Dict
     return out
 
 
+def _pairwise_merge(items: List[ColStats]) -> ColStats:
+    """Balanced pairwise reduction of Chan merges.
+
+    A left fold applies the pairwise update n−1 times to an ever-growing
+    accumulator, so rounding error in m2 grows O(n); the balanced tree keeps
+    both merge operands at comparable magnitude and bounds the growth at
+    O(log n) — this is what keeps confidence intervals honest on shifted
+    data (|mean| ≫ std) merged across hundreds of partitions."""
+    while len(items) > 1:
+        items = [
+            items[i].merge(items[i + 1]) if i + 1 < len(items) else items[i]
+            for i in range(0, len(items), 2)
+        ]
+    return items[0]
+
+
 def merge_stats(parts: Sequence[Dict[str, ColStats]]) -> Dict[str, ColStats]:
-    out: Dict[str, ColStats] = {}
+    per_key: Dict[str, List[ColStats]] = {}
     for p in parts:
         for k, s in p.items():
-            out[k] = out[k].merge(s) if k in out else s
-    return out
+            per_key.setdefault(k, []).append(s)
+    return {k: _pairwise_merge(v) for k, v in per_key.items()}
 
 
 def stats_to_table(stats: Dict[str, ColStats]) -> PTable:
@@ -294,6 +311,221 @@ def merge_groupby(
             acc = np.divide(acc, cnt, out=np.full(nk, np.nan), where=cnt > 0)
         cols[out_name] = Column(data=np.asarray(acc))
     return PTable([Partition(cols, [by] + [a[0] for a in aggs])])
+
+
+# --------------------------------------------------------------------------- #
+# Running combines — progressive bounded estimates                             #
+#                                                                              #
+# Each blocking op above is a monoid (per-partition partials + associative     #
+# combine), so a *prefix* of the partials is itself a valid aggregate of the   #
+# rows covered so far.  The Running* state objects below fold completed        #
+# partials in as they stream out of the executor and can produce, at any       #
+# coverage fraction, (a) an estimate table in the same shape the exact         #
+# combine produces and (b) CLT-style confidence intervals with a               #
+# finite-population correction √(1 − coverage) that collapses the interval to  #
+# a point exactly at 100% coverage.  Partitions are treated as the sampling    #
+# unit (cluster sampling): the executor's sample-first ordering makes the      #
+# covered prefix approximate a uniform draw over partitions.                   #
+# --------------------------------------------------------------------------- #
+
+Z95 = 1.959963984540054  # standard normal 97.5% quantile → 95% two-sided
+
+
+class RunningStats:
+    """Streaming describe/mean: Chan-merged ColStats per column plus a CLT
+    interval on each column mean.  ``kind`` selects the estimate shape:
+    ``describe`` → stats_to_table, ``mean`` → means_to_table,
+    ``mean_scalar`` → float."""
+
+    def __init__(self, total_units: int, kind: str = "describe"):
+        self.total_units = total_units
+        self.kind = kind
+        self.merged: Dict[str, ColStats] = {}
+
+    def update(self, index: int, partial: Dict[str, ColStats]) -> None:
+        for k, s in partial.items():
+            self.merged[k] = self.merged[k].merge(s) if k in self.merged else s
+
+    def snapshot(self, coverage: float) -> Tuple[Any, Dict[str, Tuple[float, float]]]:
+        fpc = math.sqrt(max(0.0, 1.0 - coverage))
+        intervals: Dict[str, Tuple[float, float]] = {}
+        for name, s in self.merged.items():
+            if s.n > 1:
+                se = s.std / math.sqrt(s.n) * fpc
+                intervals[name] = (s.mean - Z95 * se, s.mean + Z95 * se)
+            elif s.n == 1:
+                # one valid row: the variance is unknowable, be honest
+                intervals[name] = (
+                    (s.mean, s.mean) if coverage >= 1.0 else (-math.inf, math.inf)
+                )
+        if self.kind == "describe":
+            value: Any = stats_to_table(self.merged)
+        elif self.kind == "mean":
+            value = means_to_table(self.merged)
+        else:  # mean_scalar: single-column mean as a float
+            means = [s.mean for s in self.merged.values() if s.n]
+            value = float(means[0]) if means else float("nan")
+        return value, intervals
+
+
+class RunningValueCounts:
+    """Streaming value_counts: per-value count sums (and sums of squares)
+    over the k partitions seen so far.  The estimate scales each count by
+    m/k (m = total partitions); the interval per value comes from the
+    partition-level spread: se(Ĉ) = m·√(var_c/k)·√(1 − k/m)."""
+
+    def __init__(self, total_units: int, col: str, dictionary: Optional[np.ndarray]):
+        self.total_units = total_units
+        self.col = col
+        self.dictionary = dictionary
+        self._sum: Dict[Any, float] = {}
+        self._sumsq: Dict[Any, float] = {}
+        self.k = 0
+
+    def _label(self, v: Any) -> str:
+        if self.dictionary is not None:
+            return str(self.dictionary[int(v)])
+        return str(v)
+
+    def update(self, index: int, partial: Tuple[np.ndarray, np.ndarray]) -> None:
+        values, counts = partial
+        for v, c in zip(np.asarray(values).tolist(), np.asarray(counts).tolist()):
+            self._sum[v] = self._sum.get(v, 0.0) + c
+            self._sumsq[v] = self._sumsq.get(v, 0.0) + c * c
+        self.k += 1
+
+    def snapshot(self, coverage: float) -> Tuple[Any, Dict[str, Tuple[float, float]]]:
+        m = max(self.total_units, 1)
+        k = max(self.k, 1)
+        scale = m / k
+        intervals: Dict[str, Tuple[float, float]] = {}
+        if self._sum:
+            uniq = np.array(sorted(self._sum))
+            sums = np.array([self._sum[v] for v in uniq.tolist()], dtype=np.float64)
+            cnts = np.rint(sums * scale).astype(np.int64)
+            order = np.lexsort((uniq, -cnts))
+            vals_o = uniq[order]
+            cnts_o = cnts[order]
+            fpc = math.sqrt(max(0.0, 1.0 - self.k / m))
+            for v in uniq.tolist():
+                est = self._sum[v] * scale
+                if self.k > 1:
+                    mean_c = self._sum[v] / k
+                    var_c = max(
+                        (self._sumsq[v] - k * mean_c * mean_c) / (k - 1), 0.0
+                    )
+                    se = m * math.sqrt(var_c / k) * fpc
+                    intervals[self._label(v)] = (est - Z95 * se, est + Z95 * se)
+                else:
+                    intervals[self._label(v)] = (
+                        (est, est) if coverage >= 1.0 else (-math.inf, math.inf)
+                    )
+        else:
+            vals_o = np.array([])
+            cnts_o = np.array([], dtype=np.int64)
+        value_col = Column(
+            data=np.asarray(
+                vals_o.astype(np.int32 if self.dictionary is not None else vals_o.dtype)
+            ),
+            dictionary=self.dictionary,
+        )
+        value = PTable(
+            [
+                Partition(
+                    {self.col: value_col, "count": Column(data=np.asarray(cnts_o))},
+                    [self.col, "count"],
+                )
+            ]
+        )
+        return value, intervals
+
+
+class RunningGroupby:
+    """Streaming groupby_agg: keeps the raw partials seen so far and re-runs
+    the exact combine over them per snapshot (k ≤ partitions, cheap), then
+    scales additive aggregates (sum/count) by m/k.  Intervals are produced
+    per ``out_name[key]`` for sum/count (partition-level totals) and mean
+    (spread of per-partition ratios)."""
+
+    def __init__(
+        self,
+        total_units: int,
+        by: str,
+        aggs: Sequence[Tuple[str, str, Any]],
+        dictionary: Optional[np.ndarray],
+        topk_keys: Optional[int] = None,
+    ):
+        self.total_units = total_units
+        self.by = by
+        self.aggs = list(aggs)
+        self.dictionary = dictionary
+        self.topk_keys = topk_keys
+        self.partials: Dict[int, dict] = {}
+
+    def _label(self, v: Any) -> str:
+        if self.dictionary is not None:
+            return str(self.dictionary[int(v)])
+        return str(v)
+
+    def update(self, index: int, partial: dict) -> None:
+        self.partials[index] = partial
+
+    def snapshot(self, coverage: float) -> Tuple[Any, Dict[str, Tuple[float, float]]]:
+        parts = [self.partials[i] for i in sorted(self.partials)]
+        table = merge_groupby(parts, self.by, self.aggs, self.dictionary, self.topk_keys)
+        k = max(len(parts), 1)
+        m = max(self.total_units, 1)
+        scale = m / k
+        part0 = table.partitions[0]
+        for out_name, _col, fn in self.aggs:
+            if fn in ("sum", "count"):
+                c = part0.columns[out_name]
+                part0 = part0.with_column(
+                    out_name,
+                    Column(data=np.asarray(c.data, np.float64) * scale, mask=c.mask),
+                )
+        return PTable([part0]), self._intervals(parts, k, m)
+
+    def _intervals(
+        self, parts: Sequence[dict], k: int, m: int
+    ) -> Dict[str, Tuple[float, float]]:
+        out: Dict[str, Tuple[float, float]] = {}
+        if k < 2:
+            return out
+        fpc = math.sqrt(max(0.0, 1.0 - k / m))
+        keys_all = sorted({kk for p in parts for kk in np.asarray(p["keys"]).tolist()})
+        for out_name, _col, fn in self.aggs:
+            if callable(fn) or fn in ("min", "max"):
+                continue  # non-additive: no sensible partition-level CI
+            for key in keys_all:
+                contribs: List[float] = []
+                ratios: List[float] = []
+                for p in parts:
+                    pk = np.asarray(p["keys"])
+                    pos = int(np.searchsorted(pk, key))
+                    has = pos < len(pk) and pk[pos] == key
+                    _kind, payload = p["aggs"][out_name]
+                    if fn == "mean":
+                        if has and payload[1][pos] > 0:
+                            ratios.append(float(payload[0][pos] / payload[1][pos]))
+                    else:
+                        contribs.append(float(payload[pos]) if has else 0.0)
+                label = f"{out_name}[{self._label(key)}]"
+                if fn == "mean":
+                    if len(ratios) > 1:
+                        r = np.asarray(ratios)
+                        mu = float(r.mean())
+                        se = float(r.std(ddof=1)) / math.sqrt(len(r)) * fpc
+                        out[label] = (mu - Z95 * se, mu + Z95 * se)
+                else:
+                    arr = np.asarray(contribs)
+                    total = float(arr.sum())
+                    mean_c = total / k
+                    var_c = float(((arr - mean_c) ** 2).sum()) / (k - 1)
+                    est = total * m / k
+                    se = m * math.sqrt(var_c / k) * fpc
+                    out[label] = (est - Z95 * se, est + Z95 * se)
+        return out
 
 
 # --------------------------------------------------------------------------- #

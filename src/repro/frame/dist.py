@@ -21,32 +21,42 @@ from jax.sharding import PartitionSpec as P
 
 def masked_stats_local(x: jnp.ndarray, mask: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
     """Single-pass fused stats over a masked column (the `masked_stats`
-    kernel's contract): (count, sum, sumsq, min, max)."""
+    kernel's contract): (count, sum, m2, min, max), where m2 is the centered
+    second moment Σ m·(x − local mean)² — a raw sum of squares cancels
+    catastrophically when |mean| ≫ std."""
     m = mask.astype(x.dtype)
     n = jnp.sum(m)
     s = jnp.sum(x * m)
-    ss = jnp.sum(x * x * m)
+    mean = s / jnp.maximum(n, 1)
+    d = (x - mean) * m
+    m2 = jnp.sum(d * d)
     big = jnp.asarray(jnp.inf, x.dtype)
     mn = jnp.min(jnp.where(mask, x, big))
     mx = jnp.max(jnp.where(mask, x, -big))
-    return n, s, ss, mn, mx
+    return n, s, m2, mn, mx
 
 
 def make_distributed_describe(mesh: Mesh, axis: str = "data"):
     """describe over a column sharded along ``axis``: local fused pass + psum.
 
+    Per-shard moments about the local mean are combined with the parallel
+    (Chan-style) variance formula: total m2 = Σ_i (m2_i + n_i·(mean_i −
+    mean)²), realised as a second psum once the global mean is known.
+
     Returns a jit-compiled fn (x, mask) -> (count, mean, std, min, max).
     """
 
     def _local(x, mask):
-        n, s, ss, mn, mx = masked_stats_local(x, mask)
-        n = jax.lax.psum(n, axis)
-        s = jax.lax.psum(s, axis)
-        ss = jax.lax.psum(ss, axis)
+        n_l, s_l, m2_l, mn, mx = masked_stats_local(x, mask)
+        n = jax.lax.psum(n_l, axis)
+        s = jax.lax.psum(s_l, axis)
         mn = jax.lax.pmin(mn, axis)
         mx = jax.lax.pmax(mx, axis)
         mean = s / jnp.maximum(n, 1)
-        var = jnp.maximum(ss / jnp.maximum(n, 1) - mean * mean, 0.0)
+        lmean = s_l / jnp.maximum(n_l, 1)
+        delta = lmean - mean
+        m2 = jax.lax.psum(m2_l + delta * delta * n_l, axis)
+        var = jnp.maximum(m2, 0.0) / jnp.maximum(n, 1)
         denom = jnp.maximum(n - 1, 1)
         std = jnp.sqrt(var * n / denom)
         return jnp.stack([n, mean, std, mn, mx])

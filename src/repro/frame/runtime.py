@@ -463,6 +463,16 @@ class FrameRuntime:
             lambda node, inputs, group, bk: BK.plan_stats_batch(group, backend=bk)
         )
 
+        def stats_running(kind):
+            # progressive channel: per-partition ColStats partials stream into
+            # a Chan-merged running state with CLT intervals (frame/blocking)
+            def make(node, inputs):
+                return B.RunningStats(
+                    total_units=len(inputs[0].partitions), kind=kind
+                )
+
+            return make
+
         eng.register_op(
             "describe",
             OpRuntime(
@@ -470,6 +480,7 @@ class FrameRuntime:
                 combine=lambda n, i, r: B.stats_to_table(B.merge_stats(r)),
                 make_batches=stats_batches,
                 try_fused=self._try_fused,
+                running_combine=stats_running("describe"),
             ),
         )
         eng.register_op(
@@ -479,6 +490,7 @@ class FrameRuntime:
                 combine=lambda n, i, r: B.means_to_table(B.merge_stats(r)),
                 make_batches=stats_batches,
                 try_fused=self._try_fused,
+                running_combine=stats_running("mean"),
             ),
         )
 
@@ -494,6 +506,7 @@ class FrameRuntime:
                 combine=mean_scalar_combine,
                 make_batches=stats_batches,
                 try_fused=self._try_fused,
+                running_combine=stats_running("mean_scalar"),
             ),
         )
 
@@ -520,6 +533,11 @@ class FrameRuntime:
             dictionary = inputs[0].partitions[0].columns[col].dictionary
             return B.merge_value_counts(results, dictionary, col)
 
+        def vc_running(node, inputs):
+            col = node.kwargs["col"]
+            dictionary = inputs[0].partitions[0].columns[col].dictionary
+            return B.RunningValueCounts(len(inputs[0].partitions), col, dictionary)
+
         eng.register_op(
             "value_counts",
             OpRuntime(
@@ -530,6 +548,7 @@ class FrameRuntime:
                         group, node.kwargs["col"], backend=bk
                     )
                 ),
+                running_combine=vc_running,
             ),
         )
 
@@ -560,6 +579,17 @@ class FrameRuntime:
                 results, by, node.kwargs["aggs"], dictionary, node.kwargs.get("topk")
             )
 
+        def gb_running(node, inputs):
+            by = node.kwargs["by"]
+            dictionary = inputs[0].partitions[0].columns[by].dictionary
+            return B.RunningGroupby(
+                len(inputs[0].partitions),
+                by,
+                node.kwargs["aggs"],
+                dictionary,
+                node.kwargs.get("topk"),
+            )
+
         eng.register_op(
             "groupby_agg",
             OpRuntime(
@@ -576,6 +606,7 @@ class FrameRuntime:
                     )
                 ),
                 try_fused=self._try_fused,
+                running_combine=gb_running,
             ),
         )
 

@@ -1,8 +1,13 @@
 """Fused single-pass masked statistics (the `describe` hot loop) for TPU.
 
-One HBM read of the column produces count/sum/sumsq/min/max simultaneously —
+One HBM read of the column produces count/sum/m2/min/max simultaneously —
 the memory-bound fusion that replaces five separate passes.  Row tiles stream
 through the grid; running moments live in VMEM scratch; one final write.
+
+``m2`` is the centered second moment Σ m·(x − mean)², accumulated with Chan's
+pairwise update (per-tile moment about the tile's own mean + cross-mean
+correction on merge) so Var = m2/n stays accurate in f32 when |mean| ≫ std —
+a raw sum of squares cancels catastrophically in that regime.
 """
 from __future__ import annotations
 
@@ -20,7 +25,7 @@ _BIG = jnp.inf
 def _stats_kernel(
     x_ref,  # (1, T)
     m_ref,  # (1, T) bool
-    out_ref,  # (1, 8) f32: count, sum, sumsq, min, max, (3 pad)
+    out_ref,  # (1, 8) f32: count, sum, m2, min, max, (3 pad)
     acc_scr,  # (1, 8) f32
     *,
     num_tiles: int,
@@ -38,12 +43,23 @@ def _stats_kernel(
     m = m_ref[0]
     mf = m.astype(jnp.float32)
     cur = acc_scr[0, :]
-    count = cur[0] + jnp.sum(mf)
-    s = cur[1] + jnp.sum(x * mf)
-    ss = cur[2] + jnp.sum(x * x * mf)
+    cnt, s, m2 = cur[0], cur[1], cur[2]
+    tcnt = jnp.sum(mf)
+    tsum = jnp.sum(x * mf)
+    tmean = tsum / jnp.maximum(tcnt, 1.0)
+    d = (x - tmean) * mf
+    tm2 = jnp.sum(d * d)
+    n = cnt + tcnt
+    delta = tmean - s / jnp.maximum(cnt, 1.0)
+    merged_m2 = m2 + tm2 + delta * delta * cnt * tcnt / jnp.maximum(n, 1.0)
+    # all-masked tiles (padding) are exact no-ops for the moment slots
+    live = tcnt > 0
+    count = jnp.where(live, n, cnt)
+    s = jnp.where(live, s + tsum, s)
+    m2 = jnp.where(live, merged_m2, m2)
     mn = jnp.minimum(cur[3], jnp.min(jnp.where(m, x, _BIG)))
     mx = jnp.maximum(cur[4], jnp.max(jnp.where(m, x, -_BIG)))
-    acc_scr[0, :] = jnp.stack([count, s, ss, mn, mx, 0.0, 0.0, 0.0])
+    acc_scr[0, :] = jnp.stack([count, s, m2, mn, mx, 0.0, 0.0, 0.0])
 
     @pl.when(t == num_tiles - 1)
     def _fin():
@@ -57,7 +73,7 @@ def masked_stats(
     tile: int = DEFAULT_TILE,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Returns f32[5]: (count, sum, sumsq, min, max) over valid entries."""
+    """Returns f32[5]: (count, sum, m2, min, max) over valid entries."""
     n = x.shape[0]
     tile = min(tile, n)
     pad = (-n) % tile

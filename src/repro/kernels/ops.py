@@ -154,10 +154,17 @@ def _pad1(x: jnp.ndarray, nb: int, value) -> jnp.ndarray:
 
 
 def _stats_row_tiled(x: jnp.ndarray, m: jnp.ndarray, tile: int) -> jnp.ndarray:
-    """One column's (count, sum, sumsq, min, max) via a lax.scan over tiles —
+    """One column's (count, sum, m2, min, max) via a lax.scan over tiles —
     the XLA mirror of the Pallas kernel's grid: one HBM pass, accumulators and
     per-tile temporaries stay in cache instead of materialising n-sized
-    intermediates (≫ faster than the naive five-reduction form on CPU)."""
+    intermediates (≫ faster than the naive five-reduction form on CPU).
+
+    ``m2`` is the centered second moment Σ m·(x − mean)², carried with Chan's
+    pairwise update: each tile computes its moment about its *own* mean, then
+    merges into the running accumulator with the cross-mean correction term.
+    A raw sum of squares cancels catastrophically in f32 when |mean| ≫ std
+    (ss and s²/n agree in their leading digits), which is exactly the regime
+    where confidence intervals on shifted data go wrong."""
     nt = x.shape[0] // tile
     xt = x.reshape(nt, tile)
     mt = m.reshape(nt, tile)
@@ -165,11 +172,22 @@ def _stats_row_tiled(x: jnp.ndarray, m: jnp.ndarray, tile: int) -> jnp.ndarray:
     def body(acc, inp):
         xi, mi = inp
         mf = mi.astype(jnp.float32)
-        cnt, s, ss, mn, mx = acc
+        cnt, s, m2, mn, mx = acc
+        tcnt = mf.sum()
+        tsum = (xi * mf).sum()
+        tmean = tsum / jnp.maximum(tcnt, 1.0)
+        d = (xi - tmean) * mf
+        tm2 = (d * d).sum()
+        n = cnt + tcnt
+        delta = tmean - s / jnp.maximum(cnt, 1.0)
+        merged_m2 = m2 + tm2 + delta * delta * cnt * tcnt / jnp.maximum(n, 1.0)
+        # All-masked tiles (bucket padding) must stay exact no-ops so results
+        # are invariant to how far the input was padded; gate on tcnt > 0.
+        live = tcnt > 0
         return (
-            cnt + mf.sum(),
-            s + (xi * mf).sum(),
-            ss + (xi * xi * mf).sum(),
+            jnp.where(live, n, cnt),
+            jnp.where(live, s + tsum, s),
+            jnp.where(live, merged_m2, m2),
             jnp.minimum(mn, jnp.where(mi, xi, jnp.inf).min()),
             jnp.maximum(mx, jnp.where(mi, xi, -jnp.inf).max()),
         ), None
@@ -191,7 +209,8 @@ def _masked_stats_batch_xla(xs: jnp.ndarray, ms: jnp.ndarray, tile: int) -> jnp.
 
 def masked_stats_batch(xs, ms) -> jnp.ndarray:
     """Batched fused describe pass: (C, n) values + (C, n) validity → (C, 5)
-    rows of (count, sum, sumsq, min, max).  One dispatch covers every numeric
+    rows of (count, sum, m2, min, max) where m2 = Σ m·(x − mean)² is the
+    Chan-merged centered second moment.  One dispatch covers every numeric
     column of a partition; rows are padded to a shared shape bucket."""
     xs = jnp.asarray(xs, jnp.float32)
     ms = jnp.asarray(ms, bool)
@@ -769,7 +788,7 @@ def _filter_stats_xla(
 
 def filter_then_masked_stats(xs, ms, keep) -> jnp.ndarray:
     """Fused filter→describe: (C, n) values + (C, n) validity + keep (host
-    bool mask over the first ≤ n rows) → (C, 5) rows of (count, sum, sumsq,
+    bool mask over the first ≤ n rows) → (C, 5) rows of (count, sum, m2,
     min, max) over the kept+valid entries.
 
     Bit-for-bit equal to ``masked_stats_batch`` on the filtered partition

@@ -55,14 +55,21 @@ def _neutral(mode: str, dtype) -> jnp.ndarray:
 
 
 def masked_stats_ref(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
-    """(count, sum, sumsq, min, max) over the valid entries — f32[5]."""
+    """(count, sum, m2, min, max) over the valid entries — f32[5].
+
+    m2 is the centered second moment Σ m·(x − mean)², computed two-pass here
+    (the kernels accumulate it tile-wise with Chan's pairwise update)."""
     m = mask.astype(x.dtype)
     big = jnp.asarray(jnp.inf, x.dtype)
+    n = jnp.sum(m)
+    s = jnp.sum(x * m)
+    mean = s / jnp.maximum(n, 1)
+    d = (x - mean) * m
     return jnp.stack(
         [
-            jnp.sum(m),
-            jnp.sum(x * m),
-            jnp.sum(x * x * m),
+            n,
+            s,
+            jnp.sum(d * d),
             jnp.min(jnp.where(mask, x, big)),
             jnp.max(jnp.where(mask, x, -big)),
         ]

@@ -180,13 +180,21 @@ class MultiTenantServer:
         return prog
 
     # --------------------------------------------------------- interaction --
-    def interact(self, tenant: str, node: Node) -> Any:
+    def interact(self, tenant: str, node: Node, progressive: bool = False) -> Any:
         """A tenant's interaction on a shared node (from a submitted program's
         ``roots``).  Cache hit/miss is logged *before* display so the schedule
-        log captures whether think-time harvest got there first."""
+        log captures whether think-time harvest got there first.
+
+        ``progressive=True`` returns a ProgressiveResult (bounded estimate +
+        upgrade path); its refinement units are attributed to ``tenant`` in
+        the executor's per-tenant counters.  Non-progressive log entries keep
+        their historical shape; progressive calls log a distinct tag."""
         if self.schedule_log is not None:
             hit = "hit" if node.nid in self.engine.cache else "miss"
-            self.schedule_log.append(["interact", tenant, node.nid, hit])
+            tag = "interact_progressive" if progressive else "interact"
+            self.schedule_log.append([tag, tenant, node.nid, hit])
+        if progressive:
+            return self.engine.display_progressive(node, tenant=tenant)
         return self.engine.display(node, tenant=tenant)
 
     def think(self, tenant: str, seconds: float) -> dict:

@@ -170,12 +170,20 @@ class OpportunisticServer:
         prompt: Sequence[int],
         n_tokens: int = 8,
         tenant: Optional[str] = None,
-    ) -> GenResult:
+        progressive: bool = False,
+    ):
         """A user request — an *interaction*: preempts background work, runs
-        only its critical path (prefill reused if speculatively warmed)."""
+        only its critical path (prefill reused if speculatively warmed).
+
+        With ``progressive=True`` returns a ProgressiveResult immediately;
+        generation has no running combine, so the channel reports coverage
+        (tokens decoded / requested) and ``upgrade()`` yields the exact
+        GenResult."""
         pre = self._prefill_node(prompt, tenant)
         gen = self.engine.add("generate", parents=[pre], literals=[int(n_tokens)])
         self._subscribe(gen, tenant)
+        if progressive:
+            return self.engine.interact(gen, tenant=tenant, progressive=True)
         return self.engine.display(gen, tenant=tenant)
 
     def anticipate(
