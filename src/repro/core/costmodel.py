@@ -135,6 +135,18 @@ class CostModel:
         b = self._backend_overhead.get((op, backend), 0.0)
         return a * max(float(rows), 0.0) + b
 
+    def estimate_dispatches(
+        self, op: str, backend: str, rows_per_dispatch: float, n_dispatches: int
+    ) -> Optional[float]:
+        """``n_dispatches`` × the affine per-dispatch estimate: the cost of
+        running one partial per partition, each paying the overhead intercept
+        — the term a single collective (sharded) dispatch amortises away.
+        None when the key has never been calibrated, like :meth:`estimate`."""
+        per = self.estimate(op, backend, rows_per_dispatch)
+        if per is None:
+            return None
+        return per * max(int(n_dispatches), 1)
+
     def has_calibration(self, op: str, backend: str) -> bool:
         return (op, backend) in self._backend_unit_cost
 

@@ -27,7 +27,20 @@ from typing import Any, Callable, Iterable, Mapping, Optional, Sequence
 # Ops whose literal arguments are considered *tunable parameters* for
 # speculative materialisation (paper §5.2: "users ... changing the value of a
 # filter repeatedly").
-PARAMETRIC_OPS = frozenset({"filter_cmp", "isin", "head", "tail", "between"})
+PARAMETRIC_OPS = frozenset(
+    {"filter_cmp", "isin", "head", "tail", "between", "sort_values"}
+)
+
+# Parametric *kwargs* per op: tunable parameters that live in kwargs rather
+# than literals.  For sort_values that's the sort column, direction and top-k
+# limit — "same pipeline, re-sorted by another column / different k" is the
+# same exploratory pattern as filter-constant tweaking, and its pre-sort
+# input is equally worth keeping warm.  param_fingerprint drops exactly
+# these keys; every other kwarg (and the whole set for non-parametric ops)
+# still distinguishes nodes.
+PARAMETRIC_KWARGS: Mapping[str, frozenset] = {
+    "sort_values": frozenset({"by", "ascending", "limit"}),
+}
 
 # Ops that inspect results (paper §2.1 "interactions").  The parser marks the
 # trailing expression of a cell as an interaction; these ops are *always*
@@ -83,7 +96,10 @@ class Node:
         if not (parametric and self.op in PARAMETRIC_OPS):
             for a in self.literals:
                 h.update(_lit_repr(a).encode())
+        skip = PARAMETRIC_KWARGS.get(self.op, frozenset()) if parametric else frozenset()
         for k in sorted(self.kwargs):
+            if k in skip:
+                continue
             h.update(k.encode())
             h.update(_lit_repr(self.kwargs[k]).encode())
         return h.hexdigest()

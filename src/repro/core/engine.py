@@ -496,7 +496,7 @@ class Engine:
             self.partials[node.nid] = prog
         missing = prog.missing()
         if missing:
-            order = sample_first_order(missing, prog.total_units or len(missing))
+            order = pr.refinement_order(missing)
             self.executor.run_units(
                 node, pr._inputs, self.partials,
                 order[: max(int(max_units), 1)], tenant=pr.tenant,

@@ -66,6 +66,11 @@ class UnitBatch:
     finalize: Callable[[Any], List[Any]]
     cost_s: float = 0.0  # simulated duration of the whole batch
     tag: str = ""
+    # >1 marks a *sharded* batch: one collective dispatch over a device mesh
+    # covering k partitions × `devices` devices (frame/dist.py), instead of a
+    # single-device fused kernel.  Purely accounting — the executor treats
+    # both flavours identically.
+    devices: int = 1
 
     def __len__(self) -> int:
         return len(self.indices)
@@ -174,6 +179,8 @@ class ExecStats:
     seconds: float = 0.0
     batches_run: int = 0  # fused dispatches (a batch of k counts k units_run)
     units_batched: int = 0  # units that rode a multi-unit batch
+    sharded_batches: int = 0  # collective (multi-device) dispatches
+    units_sharded: int = 0  # units that rode a sharded batch
     # multi-tenant serving: units attributed to the think window they ran in,
     # keyed by tenant ("" = untenanted).  Units a tenant's window executes for
     # *another* tenant's demand still land here — the attribution is "whose
@@ -440,6 +447,9 @@ class Executor:
             self.stats.batches_run += 1
             if len(batch) > 1:
                 self.stats.units_batched += len(batch)
+            if batch.devices > 1:
+                self.stats.sharded_batches += 1
+                self.stats.units_sharded += len(batch)
 
         def finish(batch: UnitBatch, handle: Any, mode: Optional[str]) -> None:
             results = batch.finalize(handle)

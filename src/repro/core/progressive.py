@@ -29,9 +29,10 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterator, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 from . import faults
+from .scheduler import sample_first_order
 
 
 @dataclass
@@ -130,6 +131,28 @@ class ProgressiveResult:
             value=value, coverage=cov, intervals=intervals,
             exact=False, n_units=k, total_units=self.total_units,
         )
+
+    # -- refinement ordering --------------------------------------------------
+    def refinement_order(self, missing: Sequence[int]) -> List[int]:
+        """Scheduler-aware refinement: ask the running combine which missing
+        partitions would shrink the *widest live confidence interval* fastest
+        (``unit_priority`` — see frame/blocking.py), falling back to the
+        sample-first bit-reversal lattice for combines without one.  The
+        ordering is advisory: any estimator failure, or a permutation that
+        doesn't cover ``missing`` exactly, degrades to the lattice — exact
+        completion semantics never depend on it."""
+        total = self.total_units or len(missing)
+        with self._mutex:
+            combine = self._combine
+        prio = getattr(combine, "unit_priority", None)
+        if prio is not None:
+            try:
+                order = prio(list(missing), total)
+            except Exception:  # pragma: no cover - defensive
+                order = None
+            if order is not None and sorted(order) == sorted(missing):
+                return list(order)
+        return sample_first_order(missing, total)
 
     # -- upgrading ------------------------------------------------------------
     def refine(self, units: int = 1) -> BoundedEstimate:

@@ -15,6 +15,12 @@ repeatedly".  The system therefore
 Because the DAG hash-conses, a re-submitted filter with a new literal becomes
 a *sibling* node sharing the same parent; `param_fingerprint` equality is how
 we recognise the pattern and count speculation hits.
+
+The parametric family is wider than filters: ``sort_values`` treats the sort
+column, direction and top-k limit as tunable parameters too (see
+``dag.PARAMETRIC_KWARGS``), so "re-sort the same frame by another column" or
+"widen the top-k" resubmissions keep the pre-sort input pinned and count as
+hits exactly like filter-constant tweaks.
 """
 from __future__ import annotations
 

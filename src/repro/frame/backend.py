@@ -868,13 +868,33 @@ def join_partition(
 ) -> Partition:
     bk = active_backend(backend)
     lcol = left.columns.get(on)
-    if (
-        bk == "numpy"
-        or how not in ("inner", "left")
-        or lcol is None
-        or left.nrows == 0
-        or not _join_keys_exact(lcol)
-    ):
+    eligible = (
+        how in ("inner", "left")
+        and lcol is not None
+        and left.nrows > 0
+        and _join_keys_exact(lcol)
+    )
+    if eligible:
+        # the sharded build is size/mode-gated, not backend-gated: a right
+        # side too big to broadcast takes the partition-parallel path even
+        # when the planner demoted the *probe* to numpy (the broadcast host
+        # build is exactly the cost being avoided)
+        sharded = _sharded_join_build_cached(right, on)
+        if sharded is not None:
+            from . import dist
+
+            rmerged_s, sb = sharded
+
+            def _run_sharded():
+                gather, hit = dist.join_probe(sb, np.asarray(_dev_f32(lcol)))
+                if lcol.mask is not None:
+                    hit = hit & np.asarray(lcol.mask)  # null left keys never match
+                return B.join_assemble(left, rmerged_s, gather, hit, how, on)
+
+            out = _guarded("join", "sharded", _run_sharded, lambda: None)
+            if out is not None:
+                return out
+    if bk == "numpy" or not eligible:
         return B.join_partition(left, right, on, how)
     build = _join_build_cached(right, on)
     if build is None:
@@ -1401,3 +1421,363 @@ def fused_topk_partition(
         return sorted_part, samples
 
     return _guarded("fused_topk", bk, _run, lambda: None)
+
+
+# --------------------------------------------------------------------------- #
+# sharded (data-mesh) dispatch paths                                           #
+#                                                                              #
+# Whole-node entry points over the ``data`` mesh (frame/dist.py): ONE          #
+# shard_map covers every partition of the node and the combine runs as         #
+# collectives inside the jit, replacing P per-partition dispatches + the       #
+# host-side merge loop.  Each returns None when it declines (no mesh, op       #
+# outside the envelope) — callers fall through to the ordinary paths.          #
+# "sharded" is a breaker/cost-model backend key only; it never flows through   #
+# the BACKENDS policy chain (resolve() would reject it).                       #
+# --------------------------------------------------------------------------- #
+
+# Right sides whose key array exceeds this broadcast to every probe as a
+# device-resident array just fine; above it, the partition-parallel build
+# shards the sort across ``data`` and probes locally (env-tunable so tests
+# and benches can exercise the sharded build without gigabyte tables).
+JOIN_BROADCAST_MAX_BYTES = int(
+    os.environ.get("REPRO_JOIN_BROADCAST_MAX", 8 << 20)
+)
+
+
+def sharded_available() -> bool:
+    from . import dist
+
+    return dist.sharded_available()
+
+
+def sharded_stats(table: "PTable", cols: Optional[Sequence[str]] = None):
+    """Merged ColStats for the table's numeric columns via ONE collective
+    dispatch — bit-for-bit ``B.merge_stats`` over per-partition XLA partials.
+    Returns ``None`` when declined (no mesh, <2 partitions, no numeric
+    columns)."""
+    from . import dist
+
+    if not dist.sharded_available() or len(table.partitions) < 2:
+        return None
+    names = list(cols) if cols is not None else B.numeric_columns(
+        table.partitions[0]
+    )
+    if not names:
+        return None
+    st = dist.ShardedPTable.from_table(table, names)
+    if st is None:
+        return None
+
+    def _run():
+        raw = dist.stats_combined(st)  # (C, 5) f64: n, mean, m2, mn, mx
+        return {
+            nm: ColStats(
+                float(r[0]), float(r[1]), float(r[2]), float(r[3]), float(r[4])
+            )
+            for nm, r in zip(names, raw)
+        }
+
+    return _guarded("stats", "sharded", _run, lambda: None)
+
+
+def sharded_stats_raws(table: "PTable", names: Sequence[str]):
+    """Per-partition (count, sum, m2, min, max) raws for EVERY partition in
+    one dispatch — the sharded UnitBatch's kernel.  Row i sliced through
+    ``_stats_from_raw`` is bit-identical to ``partial_stats(partitions[i])``.
+    Cached on the table: think-time batches after the first are host-only."""
+    from . import dist
+
+    if not dist.sharded_available():
+        return None
+    key = tuple(names)
+    cached = table.__dict__.get("_sharded_raws")
+    if cached is not None and cached[0] == key:
+        return cached[1]
+    st = dist.ShardedPTable.from_table(table, key)
+    if st is None:
+        return None
+
+    def _run():
+        return dist.stats_raws(st)
+
+    raw = _guarded("stats", "sharded", _run, lambda: None)
+    if raw is not None:
+        table.__dict__["_sharded_raws"] = (key, raw)
+    return raw
+
+
+def _shared_dictionary(table: "PTable", col: str):
+    """The column's dictionary when every partition shares the same object
+    (from_pydict encodes once, so derived tables keep sharing); None otherwise
+    — cross-partition codes are only comparable against one dictionary."""
+    d0 = table.partitions[0].columns[col].dictionary
+    if d0 is None:
+        return None
+    for p in table.partitions[1:]:
+        c = p.columns.get(col)
+        if c is None or c.dictionary is not d0:
+            return None
+    return d0
+
+
+def _sharded_seg_plan(part: Partition, by: str, aggs):
+    """Host-side mirror of ``_groupby_plan`` (same structure, numpy rows for
+    stacking instead of per-column device uploads)."""
+    key_col = part.columns[by]
+    kvalid = np.asarray(key_col.valid_mask())
+    values: list = []
+    modes: list = []
+    valid_idx: list = []
+    valids: list = [kvalid]
+    valid_row_of: Dict[int, int] = {}
+    agg_plan: list = []
+    for out_name, col, fn in aggs:
+        vcol = part.columns[col]
+        if vcol.mask is None:
+            vrow = 0
+        else:
+            k = id(vcol.mask)
+            vrow = valid_row_of.get(k)
+            if vrow is None:
+                vrow = len(valids)
+                valids.append(kvalid & np.asarray(vcol.mask))
+                valid_row_of[k] = vrow
+        if fn == "count":
+            agg_plan.append((out_name, fn, None, vrow))
+            continue
+        values.append(np.asarray(vcol.data, np.float32))
+        modes.append(_SEG_MODE[fn])
+        valid_idx.append(vrow)
+        agg_plan.append((out_name, fn, len(values) - 1, vrow))
+    return (
+        np.asarray(key_col.data, np.int32),
+        values, valids, tuple(modes), tuple(valid_idx), agg_plan,
+    )
+
+
+def _sharded_seg_stack(table: "PTable", by: str, aggs, cache_key):
+    """Stacked (keys, values, valids) device matrices for a whole-table
+    segment reduction, plus the shared plan.  None when the plan structure
+    differs across partitions (mask layout drift) — the per-partition path
+    handles those."""
+    from . import dist
+
+    mesh = dist.data_mesh()
+    if mesh is None:
+        return None
+    cached = table.__dict__.get("_sharded_seg")
+    if cached is not None and cached[0] == cache_key:
+        return cached[1]
+    parts = table.partitions
+    plans = [_sharded_seg_plan(p, by, aggs) for p in parts]
+    k0, v0, m0, modes0, vidx0, plan0 = plans[0]
+    for pl_ in plans[1:]:
+        if (
+            pl_[3] != modes0
+            or pl_[4] != vidx0
+            or len(pl_[2]) != len(m0)
+            or [(a, f, s, v) for a, f, s, v in pl_[5]]
+            != [(a, f, s, v) for a, f, s, v in plan0]
+        ):
+            return None
+    ppad, pl, d = dist._padded_layout(len(parts), mesh)
+    nb = dist._common_bucket([p.nrows for p in parts])
+    S, V = len(v0), len(m0)
+    keys = np.zeros((ppad, nb), np.int32)
+    values = np.zeros((ppad, S, nb), np.float32)
+    valids = np.zeros((ppad, V, nb), bool)
+    for i, (k, vs, ms, _, _, _) in enumerate(plans):
+        n = len(k)
+        keys[i, :n] = k
+        for s in range(S):
+            values[i, s, :n] = vs[s]
+        for v in range(V):
+            valids[i, v, :n] = ms[v]
+    entry = (
+        dist.put_sharded(mesh, keys),
+        dist.put_sharded(mesh, values),
+        dist.put_sharded(mesh, valids),
+        modes0, vidx0, plan0, pl, d,
+    )
+    table.__dict__["_sharded_seg"] = (cache_key, entry)
+    return entry
+
+
+def sharded_value_counts(table: "PTable", col: str):
+    """One collective dispatch for a whole-table value_counts over a
+    dictionary column: per-partition count rows + exact integer psum.
+    Returns ONE (values, counts) partial — feed ``B.merge_value_counts``."""
+    from . import dist
+
+    if not dist.sharded_available() or len(table.partitions) < 2:
+        return None
+    c0 = table.partitions[0].columns.get(col)
+    if c0 is None:
+        return None
+    dictionary = _shared_dictionary(table, col)
+    if dictionary is None:
+        return None
+    stack = _sharded_seg_stack(table, col, (), ("vc", col))
+    if stack is None:
+        return None
+    keys, values, valids, modes, vidx, _, pl, d = stack
+
+    def _run():
+        _, cnts = dist.segment_fold(
+            dist.data_mesh(), keys, values, valids,
+            len(dictionary), modes, vidx, pl, d,
+        )
+        return _vc_from_raw(c0.data.dtype, cnts[0])
+
+    return _guarded("value_counts", "sharded", _run, lambda: None)
+
+
+def sharded_groupby(table: "PTable", by: str, aggs):
+    """One collective dispatch for a whole-table groupby: per-partition
+    segment reductions + an in-jit f64 fold in global partition order (the
+    host combine is a flat left fold — np.add.at over payloads in partition
+    order — replayed exactly).  Returns ONE partial dict — feed
+    ``B.merge_groupby``."""
+    from . import dist
+
+    if not dist.sharded_available() or len(table.partitions) < 2:
+        return None
+    parts = table.partitions
+    for p in parts:
+        if not _groupby_supported(p, by, aggs, None):
+            return None
+    dictionary = _shared_dictionary(table, by)
+    if dictionary is None or len(dictionary) >= 1 << 24:
+        return None
+    stack = _sharded_seg_stack(table, by, tuple(aggs), ("gb", by, tuple(aggs)))
+    if stack is None:
+        return None
+    keys, values, valids, modes, vidx, agg_plan, pl, d = stack
+    key_dtype = parts[0].columns[by].data.dtype
+
+    def _run():
+        reds, cnts = dist.segment_fold(
+            dist.data_mesh(), keys, values, valids,
+            len(dictionary), modes, vidx, pl, d,
+        )
+        return _groupby_from_raw(key_dtype, agg_plan, reds, cnts)
+
+    return _guarded("groupby", "sharded", _run, lambda: None)
+
+
+def sharded_topk(
+    table: "PTable", by: str, ascending: bool, limit: int, n_samples: int = 32
+):
+    """One collective dispatch for every partition's top-k winners, then the
+    same host candidate selection (``_limit_select``) the per-partition path
+    runs — partials are bit-identical to it.  Partitions outside the kernel
+    envelope (≤ limit rows, NaN keys) take the numpy partial individually,
+    exactly as the host path would.  Returns the (partition, samples) partial
+    list — feed ``B.merge_sort``."""
+    from . import dist
+
+    if not dist.sharded_available() or len(table.partitions) < 2:
+        return None
+    if not (1 <= limit <= TOPK_MAX_K):
+        return None
+    parts = table.partitions
+    for p in parts:
+        c = p.columns.get(by)
+        if c is None or c.is_string:
+            return None
+    mesh = dist.data_mesh()
+    cached = table.__dict__.get("_sharded_topk")
+    tkey = (by, ascending)
+    if cached is not None and cached[0] == tkey:
+        kf64s, kf32s, stack, pl = cached[1]
+    else:
+        ppad, pl, d = dist._padded_layout(len(parts), mesh)
+        nb = dist._common_bucket([p.nrows for p in parts])
+        sentinel = np.float32(np.inf if ascending else -np.inf)
+        kf64s = [_sort_keys(p.columns[by], ascending) for p in parts]
+        kf32s = [k.astype(np.float32) for k in kf64s]
+        host = np.full((ppad, nb), sentinel, np.float32)
+        for i, k in enumerate(kf32s):
+            host[i, : len(k)] = k
+        stack = dist.put_sharded(mesh, host)
+        table.__dict__["_sharded_topk"] = (tkey, (kf64s, kf32s, stack, pl))
+
+    def _run():
+        winners = dist.topk_winners(mesh, stack, limit, not ascending, pl)
+        out = []
+        for i, part in enumerate(parts):
+            if part.nrows <= limit or np.isnan(kf64s[i]).any():
+                out.append(B.partial_sort(part, by, ascending, limit, n_samples))
+            else:
+                out.append(
+                    _limit_select(
+                        part, kf64s[i], kf32s[i], winners[i],
+                        ascending, limit, n_samples,
+                    )
+                )
+        return out
+
+    return _guarded("topk", "sharded", _run, lambda: None)
+
+
+def plan_stats_sharded_batch(table: "PTable", indices: Sequence[int]):
+    """Sharded :class:`UnitBatch` plan for the stats family: ONE collective
+    dispatch produces every partition's (count, sum, m2, min, max) raw row,
+    and ``finalize`` slices the listed slots through ``_stats_from_raw`` —
+    each slot bit-identical to ``partial_stats`` of that partition.  Returns
+    ``(dispatch, finalize, n_devices)`` or ``None`` when the table is outside
+    the sharded envelope."""
+    from . import dist
+
+    if not dist.sharded_available() or len(table.partitions) < 2:
+        return None
+    names = tuple(B.numeric_columns(table.partitions[0]))
+    if not names or dist.ShardedPTable.from_table(table, names) is None:
+        return None
+
+    def dispatch():
+        return sharded_stats_raws(table, names)
+
+    def finalize(raws):
+        if raws is None:  # collective declined at run time: host per-unit path
+            return [partial_stats(table.partitions[i]) for i in indices]
+        return [
+            _stats_from_raw(names, np.asarray(raws[i], np.float64))
+            for i in indices
+        ]
+
+    return dispatch, finalize, dist.device_count()
+
+
+def _sharded_join_build_cached(right: "PTable", on: str):
+    """Partition-parallel build, cached on the right table: shard the (key,
+    row-id) pairs across ``data`` and sort each shard on its own device —
+    for right sides whose broadcast key array would exceed
+    ``JOIN_BROADCAST_MAX_BYTES`` (or when sharding is forced on).  ``None``
+    marks a right side outside the envelope; the broadcast path covers it."""
+    from . import dist
+
+    cache = right.__dict__.setdefault("_sharded_join", {})
+    if on in cache:
+        return cache[on]
+    entry = None
+    total = sum(p.nrows for p in right.partitions)
+    if (
+        dist.sharded_available()
+        and total > 0
+        and (total * 4 > JOIN_BROADCAST_MAX_BYTES or dist.mode() == "on")
+    ):
+        rmerged = right.concat()
+        rcol = rmerged.columns.get(on)
+        if rcol is not None and not rcol.is_string and _join_keys_exact(rcol):
+            keys = np.asarray(rcol.data, np.float32)
+            valid = np.asarray(rcol.valid_mask())
+            if np.isfinite(keys[valid]).all():
+                kf = np.where(valid, keys, np.float32(np.inf)).astype(np.float32)
+                ids = np.where(
+                    valid, np.arange(len(kf), dtype=np.int32), np.int32(-1)
+                ).astype(np.int32)
+                # duplicate valid keys raise here, same error as join_build
+                entry = (rmerged, dist.join_build(kf, ids))
+    cache[on] = entry
+    return entry

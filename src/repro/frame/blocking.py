@@ -15,7 +15,34 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core.scheduler import sample_first_order
 from .table import Column, Partition, PTable
+
+
+def _ci_priority_order(
+    missing: Sequence[int], total: int, contrib: Dict[int, float]
+) -> Optional[List[int]]:
+    """Order ``missing`` partitions by expected shrink of the widest live
+    confidence interval.  ``contrib`` maps each *seen* partition index to its
+    (absolute) contribution to the widest-CI statistic; a missing partition is
+    scored by its nearest contributor's mass with distance decay — positional
+    locality (time-ordered facts, clustered categories) means neighbours of a
+    heavy contributor usually carry similar mass, and resolving heavy
+    contributions is what tightens a partition-spread interval.  Ties fall
+    back to the bit-reversal lattice rank, so the ordering still spreads
+    coverage when contributions are flat."""
+    if not contrib:
+        return None
+    lattice = {
+        i: r for r, i in enumerate(sample_first_order(list(missing), total))
+    }
+    seen = sorted(contrib)
+
+    def score(j: int) -> float:
+        nearest = min(seen, key=lambda s: (abs(s - j), s))
+        return contrib[nearest] / (1.0 + abs(nearest - j))
+
+    return sorted(missing, key=lambda j: (-score(j), lattice[j], j))
 
 # --------------------------------------------------------------------------- #
 # describe / mean — Welford partials                                           #
@@ -380,6 +407,7 @@ class RunningValueCounts:
         self.dictionary = dictionary
         self._sum: Dict[Any, float] = {}
         self._sumsq: Dict[Any, float] = {}
+        self._per_index: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         self.k = 0
 
     def _label(self, v: Any) -> str:
@@ -392,7 +420,30 @@ class RunningValueCounts:
         for v, c in zip(np.asarray(values).tolist(), np.asarray(counts).tolist()):
             self._sum[v] = self._sum.get(v, 0.0) + c
             self._sumsq[v] = self._sumsq.get(v, 0.0) + c * c
+        self._per_index[index] = (np.asarray(values), np.asarray(counts))
         self.k += 1
+
+    def unit_priority(
+        self, missing: Sequence[int], total: int
+    ) -> Optional[List[int]]:
+        """Refinement ordering: prefer partitions expected to shrink the
+        widest live count interval.  The interval widths share every factor
+        except the partition-level count variance, so the widest CI belongs
+        to the value with the largest var_c — missing partitions are scored
+        by their neighbours' counts of that value."""
+        if self.k < 2 or not self._per_index:
+            return None
+        k = self.k
+        var = {
+            v: max(self._sumsq[v] - k * (self._sum[v] / k) ** 2, 0.0)
+            for v in self._sum
+        }
+        target = max(sorted(var), key=lambda v: var[v])
+        contrib: Dict[int, float] = {}
+        for i, (values, counts) in self._per_index.items():
+            pos = np.nonzero(values == target)[0]
+            contrib[i] = float(counts[pos[0]]) if len(pos) else 0.0
+        return _ci_priority_order(missing, total, contrib)
 
     def snapshot(self, coverage: float) -> Tuple[Any, Dict[str, Tuple[float, float]]]:
         m = max(self.total_units, 1)
@@ -469,6 +520,63 @@ class RunningGroupby:
 
     def update(self, index: int, partial: dict) -> None:
         self.partials[index] = partial
+
+    def unit_priority(
+        self, missing: Sequence[int], total: int
+    ) -> Optional[List[int]]:
+        """Refinement ordering: locate the (agg, key) with the widest live
+        interval (recomputing the same widths :meth:`_intervals` reports),
+        measure each seen partition's contribution to it, and score missing
+        partitions by their nearest contributor's mass with distance decay."""
+        if len(self.partials) < 2:
+            return None
+        idxs = sorted(self.partials)
+        parts = [self.partials[i] for i in idxs]
+        k = len(parts)
+        m = max(self.total_units, 1)
+        fpc = math.sqrt(max(0.0, 1.0 - k / m))
+        keys_all = sorted(
+            {kk for p in parts for kk in np.asarray(p["keys"]).tolist()}
+        )
+        best: Optional[Tuple[float, Dict[int, float]]] = None
+        for out_name, _col, fn in self.aggs:
+            if callable(fn) or fn in ("min", "max"):
+                continue  # non-additive: no partition-level CI to shrink
+            for key in keys_all:
+                contribs: List[float] = []
+                ratios: List[float] = []
+                for p in parts:
+                    pk = np.asarray(p["keys"])
+                    pos = int(np.searchsorted(pk, key))
+                    has = pos < len(pk) and pk[pos] == key
+                    _kind, payload = p["aggs"][out_name]
+                    if fn == "mean":
+                        ok = has and payload[1][pos] > 0
+                        contribs.append(float(payload[0][pos]) if ok else 0.0)
+                        if ok:
+                            ratios.append(float(payload[0][pos] / payload[1][pos]))
+                    else:
+                        contribs.append(float(payload[pos]) if has else 0.0)
+                if fn == "mean":
+                    if len(ratios) <= 1:
+                        continue
+                    r = np.asarray(ratios)
+                    width = (
+                        2 * Z95 * float(r.std(ddof=1)) / math.sqrt(len(r)) * fpc
+                    )
+                else:
+                    arr = np.asarray(contribs)
+                    mean_c = float(arr.sum()) / k
+                    var_c = float(((arr - mean_c) ** 2).sum()) / (k - 1)
+                    width = 2 * Z95 * m * math.sqrt(var_c / k) * fpc
+                if best is None or width > best[0]:
+                    best = (
+                        width,
+                        {i: abs(c) for i, c in zip(idxs, contribs)},
+                    )
+        if best is None or best[0] <= 0:
+            return None
+        return _ci_priority_order(missing, total, best[1])
 
     def snapshot(self, coverage: float) -> Tuple[Any, Dict[str, Tuple[float, float]]]:
         parts = [self.partials[i] for i in sorted(self.partials)]

@@ -1,22 +1,609 @@
-"""Distributed blocking operators via shard_map + jax.lax collectives.
+"""Device-sharded partition execution: the ``data`` mesh axis made real.
 
 The partial/combine decomposition in :mod:`repro.frame.blocking` is exactly a
-map + all-reduce: on a real pod, partitions live on devices along the ``data``
-mesh axis and the combine is a `psum`.  These functions are the device-level
-path the dry-run exercises; the Pallas kernels in :mod:`repro.kernels` replace
-the per-shard partial computations on TPU.
+map + all-reduce: partitions live on devices along the ``data`` mesh axis and
+the combine lowers to collectives.  This module holds the device layer:
+
+* :func:`data_mesh` — the process-wide 1-D ``data`` mesh (emulated multi-device
+  CPU via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, unchanged on
+  a real TPU pod);
+* :class:`ShardedPTable` — a PTable's numeric column blocks stacked into
+  ``(Ppad, C, nb)`` device matrices with ``NamedSharding`` along ``data``
+  (partition axis sharded, contiguous blocks of ``pl = Ppad/d`` partitions per
+  device), cached on the (immutable) host table;
+* sharded dispatches — describe/mean raws + exact collective combine, groupby
+  segment fold, value_counts psum, per-partition topk winners, and the
+  partition-parallel join build/probe.  Each runs ONE shard_map over all
+  partitions instead of P per-partition dispatches + a host merge loop.
+
+Bit-for-bit contract: every sharded combine replays the host combine's exact
+f64 operation sequence inside the jit.  The host ``_pairwise_merge`` (iterative
+adjacent pairing) over P partials equals a balanced pow-2 tree over
+``next_pow2(P)`` leaves with empty-ColStats padding at the end (merge with an
+``n == 0`` operand is the identity), so contiguous per-device blocks of pow-2
+size ``pl`` reproduce the host tree's lower levels locally, and ``log2(d)``
+more in-jit levels over the all-gathered subtree roots complete it.  Counts,
+mins and maxes are order-independent in exact arithmetic and ride plain
+``psum``/``pmin``/``pmax``.  Per-partition raws come from the *same* traced
+kernels (:func:`repro.kernels.ops.stats_row_tiled` et al.) the host path
+dispatches, at a shared row bucket whose extra all-masked tiles are exact
+no-ops — so the numbers entering the combine are bit-identical too.
 """
 from __future__ import annotations
 
+import math
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass
 from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from ..jaxcompat import make_mesh
 from ..jaxcompat import shard_map as _shard_map
+from ..kernels import ops
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
+
+AXIS = "data"
+
+# --------------------------------------------------------------------------- #
+# mesh management                                                              #
+# --------------------------------------------------------------------------- #
+
+_MESH: Optional[Mesh] = None
+_MESH_FAILED = False
+_MESH_LOCK = threading.Lock()
+
+
+def data_mesh() -> Optional[Mesh]:
+    """The process-wide 1-D ``data`` mesh over all local devices, or ``None``
+    when sharded execution cannot run (single device, or a non-power-of-two
+    device count — the balanced-tree combine needs pow-2 blocks)."""
+    global _MESH, _MESH_FAILED
+    if _MESH is not None:
+        return _MESH
+    if _MESH_FAILED:
+        return None
+    with _MESH_LOCK:
+        if _MESH is not None:
+            return _MESH
+        try:
+            devs = jax.devices()
+        except Exception:
+            _MESH_FAILED = True
+            return None
+        d = len(devs)
+        if d < 2 or (d & (d - 1)) != 0:
+            _MESH_FAILED = True
+            return None
+        try:
+            _MESH = make_mesh((d,), (AXIS,), devices=devs)
+        except Exception:
+            _MESH_FAILED = True
+            return None
+        return _MESH
+
+
+def device_count() -> int:
+    mesh = data_mesh()
+    return int(mesh.devices.size) if mesh is not None else 1
+
+
+# --------------------------------------------------------------------------- #
+# mode + dispatch counters                                                     #
+# --------------------------------------------------------------------------- #
+
+_MODE = "auto"  # "auto" (planner decides) | "on" (force) | "off" (disable)
+
+
+def set_mode(mode: str) -> None:
+    global _MODE
+    if mode not in ("auto", "on", "off"):
+        raise ValueError(f"sharded mode {mode!r} (want auto|on|off)")
+    _MODE = mode
+
+
+def mode() -> str:
+    return _MODE
+
+
+@contextmanager
+def use_sharded(mode_: str):
+    """Scoped sharded-dispatch mode (tests/benches force or disable)."""
+    global _MODE
+    prev = _MODE
+    set_mode(mode_)
+    try:
+        yield
+    finally:
+        _MODE = prev
+
+
+def sharded_available() -> bool:
+    """True when sharded dispatch may run: a usable mesh and not forced off."""
+    return _MODE != "off" and data_mesh() is not None
+
+
+_COUNTS: Dict[str, int] = {}
+_COUNTS_LOCK = threading.Lock()
+
+
+def _count(op: str) -> None:
+    with _COUNTS_LOCK:
+        _COUNTS[op] = _COUNTS.get(op, 0) + 1
+
+
+def dispatch_counts() -> Dict[str, int]:
+    with _COUNTS_LOCK:
+        return dict(_COUNTS)
+
+
+def reset_dispatch_counts() -> None:
+    with _COUNTS_LOCK:
+        _COUNTS.clear()
+
+
+# --------------------------------------------------------------------------- #
+# sharded placement helpers                                                    #
+# --------------------------------------------------------------------------- #
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
+
+
+def put_sharded(mesh: Mesh, x: np.ndarray) -> jnp.ndarray:
+    """Place a host array on the mesh sharded along its leading axis."""
+    return jax.device_put(x, NamedSharding(mesh, P(AXIS)))
+
+
+def _padded_layout(nparts: int, mesh: Mesh) -> Tuple[int, int, int]:
+    """(Ppad, pl, d): partitions padded to a pow-2 multiple of the device
+    count, pl = Ppad // d contiguous partitions per device."""
+    d = int(mesh.devices.size)
+    ppad = _next_pow2(max(nparts, d))
+    return ppad, ppad // d, d
+
+
+def _common_bucket(nrows: Sequence[int]) -> int:
+    """Shared row bucket for a stack of partitions: the largest partition's
+    pad bucket, at least one kernel tile so fixed-_TILE scans divide it.
+    Extra all-masked tiles are exact no-ops (see ops.masked_stats_batch)."""
+    mx = max((int(n) for n in nrows), default=0)
+    return max(ops.pad_len(mx), ops.TILE)
+
+
+# --------------------------------------------------------------------------- #
+# ShardedPTable — device-resident stats stack                                  #
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class ShardedPTable:
+    """A PTable's numeric column blocks, device-resident and sharded along
+    ``data``: ``xs``/``ms`` are ``(Ppad, C, nb)`` value/validity matrices with
+    partition ``i`` of the host table at row ``i`` (rows ≥ nparts are all
+    masked — exact-neutral padding)."""
+
+    mesh: Mesh
+    names: Tuple[str, ...]
+    xs: jnp.ndarray  # (Ppad, C, nb) f32, sharded P("data")
+    ms: jnp.ndarray  # (Ppad, C, nb) bool, sharded P("data")
+    nparts: int
+    ppad: int
+    pl: int
+    nb: int
+
+    @classmethod
+    def from_table(cls, table, names: Sequence[str]) -> Optional["ShardedPTable"]:
+        """Build (or fetch the cached) sharded stats stack for ``table``.
+        Returns ``None`` when no mesh is available or the table has no
+        partitions/columns to stack.  Cached on the immutable table."""
+        mesh = data_mesh()
+        if mesh is None:
+            return None
+        key = tuple(names)
+        cached = table.__dict__.get("_sharded_stats")
+        if cached is not None and cached.names == key:
+            return cached
+        parts = table.partitions
+        if not parts or not key:
+            return None
+        ppad, pl, d = _padded_layout(len(parts), mesh)
+        nb = _common_bucket([p.nrows for p in parts])
+        xs = np.zeros((ppad, len(key), nb), np.float32)
+        ms = np.zeros((ppad, len(key), nb), bool)
+        for i, part in enumerate(parts):
+            n = part.nrows
+            for c, name in enumerate(key):
+                col = part.columns.get(name)
+                if col is None or col.is_string:
+                    return None
+                xs[i, c, :n] = np.asarray(col.data, np.float32)
+                ms[i, c, :n] = np.asarray(col.valid_mask())
+        sh = cls(
+            mesh=mesh, names=key,
+            xs=put_sharded(mesh, xs), ms=put_sharded(mesh, ms),
+            nparts=len(parts), ppad=ppad, pl=pl, nb=nb,
+        )
+        table.__dict__["_sharded_stats"] = sh
+        return sh
+
+
+# --------------------------------------------------------------------------- #
+# exact ColStats merge, replayed in-jit (f64)                                  #
+# --------------------------------------------------------------------------- #
+
+
+def _merge_colstats(a, b):
+    """jnp replica of ColStats.merge, vectorised over columns.  Guards mirror
+    the host's n==0 identities for n/mean/m2; min/max need no guards (the
+    empty stats' ±inf neutrals are identities).  NaNs from the 0/0 division in
+    an unselected ``where`` branch are discarded by the select."""
+    an, am, am2, amn, amx = a
+    bn, bm, bm2, bmn, bmx = b
+    n = an + bn
+    delta = bm - am
+    mean_m = am + delta * bn / n
+    m2_m = am2 + bm2 + delta * delta * an * bn / n
+    mean = jnp.where(bn == 0, am, jnp.where(an == 0, bm, mean_m))
+    m2 = jnp.where(bn == 0, am2, jnp.where(an == 0, bm2, m2_m))
+    return (n, mean, m2, jnp.minimum(amn, bmn), jnp.maximum(amx, bmx))
+
+
+def _pairwise_tree(stats):
+    """Balanced adjacent-pair reduction over axis 0 (length must be pow-2) —
+    the host _pairwise_merge tree, one level per halving."""
+    size = stats[0].shape[0]
+    while size > 1:
+        a = tuple(t[0::2] for t in stats)
+        b = tuple(t[1::2] for t in stats)
+        stats = _merge_colstats(a, b)
+        size //= 2
+    return tuple(t[0] for t in stats)
+
+
+def _stats_from_raw_jit(raw64):
+    """In-jit replica of backend._stats_from_raw: (…, 5) f64 raw rows of
+    (count, sum, m2, min, max) → (n, mean, m2, mn, mx) component arrays.
+    count==0 rows already carry (0, 0, 0, +inf, −inf) from the kernel, and
+    0/max(0,1) = 0 reproduces the host's empty-mean of 0.0 exactly."""
+    n = raw64[..., 0]
+    mean = raw64[..., 1] / jnp.maximum(n, 1.0)
+    m2 = jnp.maximum(raw64[..., 2], 0.0)
+    return (n, mean, m2, raw64[..., 3], raw64[..., 4])
+
+
+# --------------------------------------------------------------------------- #
+# sharded dispatches                                                           #
+# --------------------------------------------------------------------------- #
+
+_JITS: Dict[tuple, object] = {}
+
+
+def _jit_for(key: tuple, builder):
+    fn = _JITS.get(key)
+    if fn is None:
+        fn = builder()
+        _JITS[key] = fn
+    return fn
+
+
+def _x64():
+    return jax.experimental.enable_x64()
+
+
+def _make_stats_combined(mesh: Mesh, pl: int, C: int, nb: int, d: int):
+    def shard_fn(xs, ms):  # local (pl, C, nb) / (pl, C, nb)
+        rows = [
+            ops.stats_row_tiled(xs[p, c], ms[p, c], ops.TILE)
+            for p in range(pl)
+            for c in range(C)
+        ]
+        raw = jnp.stack(rows).reshape(pl, C, 5).astype(jnp.float64)
+        stats = _stats_from_raw_jit(raw)  # 5 × (pl, C)
+        loc = _pairwise_tree(stats)  # 5 × (C,) — this device's subtree root
+        n_tot = jax.lax.psum(loc[0], AXIS)
+        mn_tot = jax.lax.pmin(loc[3], AXIS)
+        mx_tot = jax.lax.pmax(loc[4], AXIS)
+        g = tuple(jax.lax.all_gather(t, AXIS) for t in loc)  # 5 × (d, C)
+        top = _pairwise_tree(g)
+        return jnp.stack([n_tot, top[1], top[2], mn_tot, mx_tot], axis=1)
+
+    return jax.jit(
+        _shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(AXIS), P(AXIS)), out_specs=P(), check_rep=False,
+        )
+    )
+
+
+def stats_combined(st: ShardedPTable) -> np.ndarray:
+    """One dispatch: per-partition fused stats + exact collective combine.
+    Returns (C, 5) f64 rows of (n, mean, m2, min, max) — the merged ColStats
+    for each column, bit-for-bit the host pairwise merge of per-partition
+    XLA partials."""
+    with _x64():
+        fn = _jit_for(
+            ("stats_combined", st.pl, len(st.names), st.nb),
+            lambda: _make_stats_combined(
+                st.mesh, st.pl, len(st.names), st.nb, st.ppad // st.pl
+            ),
+        )
+        out = np.asarray(fn(st.xs, st.ms))
+    _count("stats")
+    return out
+
+
+def _make_stats_raws(mesh: Mesh, pl: int, C: int, nb: int):
+    def shard_fn(xs, ms):
+        rows = [
+            ops.stats_row_tiled(xs[p, c], ms[p, c], ops.TILE)
+            for p in range(pl)
+            for c in range(C)
+        ]
+        return jnp.stack(rows).reshape(pl, C, 5)
+
+    return jax.jit(
+        _shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(AXIS), P(AXIS)), out_specs=P(AXIS),
+        )
+    )
+
+
+def stats_raws(st: ShardedPTable) -> np.ndarray:
+    """One dispatch covering every partition: per-partition (count, sum, m2,
+    min, max) f32 raws, (Ppad, C, 5) — the sharded flavor of the executor's
+    UnitBatch (k partitions × d devices in one call).  Rows are bit-identical
+    to the host per-partition kernel, so slicing row i and feeding it through
+    backend._stats_from_raw reproduces the host partial exactly."""
+    fn = _jit_for(
+        ("stats_raws", st.pl, len(st.names), st.nb),
+        lambda: _make_stats_raws(st.mesh, st.pl, len(st.names), st.nb),
+    )
+    out = np.asarray(fn(st.xs, st.ms))
+    _count("stats_raws")
+    return out
+
+
+def _make_segment_fold(
+    mesh: Mesh, pl: int, d: int, nb: int, nbuckets: int,
+    S: int, V: int, modes: Tuple[str, ...], valid_idx: Tuple[int, ...],
+):
+    def shard_fn(keys, values, valids):
+        # keys (pl, nb) i32; values (pl, S, nb) f32; valids (pl, V, nb) bool
+        reds_l, cnts_l = [], []
+        for p in range(pl):
+            r, c = ops.segment_batch_body(
+                keys[p],
+                tuple(values[p, s] for s in range(S)),
+                tuple(valids[p, v] for v in range(V)),
+                nbuckets, modes, valid_idx, ops.TILE,
+            )
+            reds_l.append(r)
+            cnts_l.append(c)
+        reds = jnp.stack(reds_l).astype(jnp.float64)  # (pl, S, B)
+        cnts = jnp.stack(cnts_l).astype(jnp.float64)  # (pl, V, B)
+        if S == 0:
+            # value_counts: integer counts are order-independent in f64 —
+            # local sequential fold then one psum, both exact.
+            local = cnts.sum(axis=0)
+            return reds[0:0].reshape(0, nbuckets), jax.lax.psum(local, AXIS)
+        # groupby: the host combine is a flat left fold (np.add.at over
+        # concatenated payloads in partition order) — replay it exactly:
+        # all-gather the per-partition contributions and fold sequentially
+        # in global partition order inside the jit.
+        g_r = jax.lax.all_gather(reds, AXIS).reshape(d * pl, S, nbuckets)
+        g_c = jax.lax.all_gather(cnts, AXIS).reshape(d * pl, V, nbuckets)
+
+        def body(p, acc):
+            racc, cacc = acc
+            r = g_r[p]
+            rows = []
+            for s in range(S):
+                if modes[s] == "sum":
+                    rows.append(racc[s] + r[s])
+                elif modes[s] == "min":
+                    rows.append(jnp.minimum(racc[s], r[s]))
+                else:
+                    rows.append(jnp.maximum(racc[s], r[s]))
+            return (jnp.stack(rows), cacc + g_c[p])
+
+        init_rows = [
+            jnp.full(
+                nbuckets,
+                jnp.inf if modes[s] == "min"
+                else (-jnp.inf if modes[s] == "max" else 0.0),
+                jnp.float64,
+            )
+            for s in range(S)
+        ]
+        racc, cacc = jax.lax.fori_loop(
+            0, d * pl, body,
+            (jnp.stack(init_rows), jnp.zeros((V, nbuckets), jnp.float64)),
+        )
+        return racc, cacc
+
+    return jax.jit(
+        _shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(AXIS), P(AXIS), P(AXIS)), out_specs=(P(), P()),
+            check_rep=False,
+        )
+    )
+
+
+def segment_fold(
+    mesh: Mesh,
+    keys: jnp.ndarray,    # (Ppad, nb) i32 sharded
+    values: jnp.ndarray,  # (Ppad, S, nb) f32 sharded
+    valids: jnp.ndarray,  # (Ppad, V, nb) bool sharded
+    nbuckets: int,
+    modes: Tuple[str, ...],
+    valid_idx: Tuple[int, ...],
+    pl: int,
+    d: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """One dispatch: per-partition segment reductions + exact f64 fold in
+    global partition order.  Returns (reds (S, B), cnts (V, B)) f64 — feed
+    through backend._groupby_from_raw / _vc_from_raw as ONE synthetic partial."""
+    nb = int(keys.shape[-1])
+    S = int(values.shape[1])
+    V = int(valids.shape[1])
+    with _x64():
+        fn = _jit_for(
+            ("segment_fold", pl, d, nb, nbuckets, S, V, modes, valid_idx),
+            lambda: _make_segment_fold(
+                mesh, pl, d, nb, nbuckets, S, V, modes, valid_idx
+            ),
+        )
+        reds, cnts = fn(keys, values, valids)
+        out = (np.asarray(reds), np.asarray(cnts))
+    _count("value_counts" if S == 0 else "groupby")
+    return out
+
+
+def _make_topk_winners(mesh: Mesh, pl: int, nb: int, k: int, largest: bool):
+    def shard_fn(kf):  # (pl, nb) f32
+        return jnp.stack([ops.topk_body(kf[p], k, largest) for p in range(pl)])
+
+    return jax.jit(
+        _shard_map(shard_fn, mesh=mesh, in_specs=(P(AXIS),), out_specs=P(AXIS))
+    )
+
+
+def topk_winners(
+    mesh: Mesh, kf32: jnp.ndarray, k: int, largest: bool, pl: int
+) -> np.ndarray:
+    """One dispatch: per-partition top-k winner values for every partition,
+    (Ppad, k) f32.  Only winners[-1] (the per-partition k-th value) is
+    consumed — backend._limit_select does the host-side candidate pick, so
+    results stay bit-identical to the per-partition topk path."""
+    nb = int(kf32.shape[-1])
+    fn = _jit_for(
+        ("topk_winners", pl, nb, k, largest),
+        lambda: _make_topk_winners(mesh, pl, nb, k, largest),
+    )
+    out = np.asarray(fn(kf32))
+    _count("topk")
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# partition-parallel join: sharded sorted build + local probe + psum combine   #
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class ShardedJoinBuild:
+    """The right side's (key, row-id) pairs, range-free: padded to d equal
+    shards, each shard locally sorted on device.  Invalid/padding rows carry
+    (+inf, −1).  Intra-shard duplicate keys are rejected at build; duplicates
+    straddling shards surface at probe time via the psum'd hit count."""
+
+    mesh: Mesh
+    keys_sorted: jnp.ndarray  # (d*ml,) f32 sharded, each shard ascending
+    ids_sorted: jnp.ndarray   # (d*ml,) i32 sharded
+    ml: int
+    d: int
+    nbytes: int
+
+
+def _make_join_build(mesh: Mesh, ml: int):
+    def shard_fn(keys, ids):  # (ml,) f32 / (ml,) i32
+        ks, ids_s = jax.lax.sort((keys, ids), num_keys=1)
+        valid = ids_s >= 0
+        dup = (ks[1:] == ks[:-1]) & valid[1:] & valid[:-1]
+        dups = jax.lax.psum(dup.sum().astype(jnp.int32), AXIS)
+        return ks, ids_s, dups
+
+    return jax.jit(
+        _shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(AXIS), P(AXIS)), out_specs=(P(AXIS), P(AXIS), P()),
+            check_rep=False,
+        )
+    )
+
+
+def join_build(keys_f32: np.ndarray, ids_i32: np.ndarray) -> ShardedJoinBuild:
+    """Shard the right side's keys across ``data`` and sort each shard on its
+    own device — the build never materialises a single sorted array on one
+    host.  Raises on intra-shard duplicate valid keys (dim-table contract)."""
+    mesh = data_mesh()
+    if mesh is None:
+        raise RuntimeError("join_build: no data mesh")
+    d = int(mesh.devices.size)
+    m = int(keys_f32.shape[0])
+    ml = ops.pad_len(-(-max(m, 1) // d))
+    total = d * ml
+    kp = np.full(total, np.inf, np.float32)
+    ip = np.full(total, -1, np.int32)
+    kp[:m] = keys_f32
+    ip[:m] = ids_i32
+    fn = _jit_for(("join_build", d, ml), lambda: _make_join_build(mesh, ml))
+    ks, ids_s, dups = fn(put_sharded(mesh, kp), put_sharded(mesh, ip))
+    _count("join_build")
+    if int(dups) > 0:
+        raise ValueError("join: right-side keys must be unique (dim-table join)")
+    return ShardedJoinBuild(
+        mesh=mesh, keys_sorted=ks, ids_sorted=ids_s, ml=ml, d=d,
+        nbytes=int(keys_f32.nbytes),
+    )
+
+
+def _make_join_probe(mesh: Mesh, ml: int, nb: int):
+    def shard_fn(ks, ids, lk):  # (ml,) / (ml,) / (nb,) replicated
+        pos = jnp.searchsorted(ks, lk, side="left")
+        posc = jnp.clip(pos, 0, ml - 1)
+        hit = (ks[posc] == lk) & (ids[posc] >= 0)
+        hitc = jax.lax.psum(hit.astype(jnp.int32), AXIS)
+        gid = jax.lax.psum(jnp.where(hit, ids[posc], 0), AXIS)
+        return hitc, gid
+
+    return jax.jit(
+        _shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(AXIS), P(AXIS), P()), out_specs=(P(), P()),
+            check_rep=False,
+        )
+    )
+
+
+def join_probe(
+    build: ShardedJoinBuild, l_keys_f32: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Probe left keys against every shard locally; combine with two psums
+    (hit count + hit row-id — only the owning shard contributes).  Returns
+    (gather row-ids, hit) for the left partition.  A psum'd hit count > 1
+    means duplicate right keys straddled shards: same ValueError the host
+    build raises, just detected at first probe."""
+    n = int(l_keys_f32.shape[0])
+    nb = ops.pad_len(n)
+    lp = np.full(nb, np.nan, np.float32)
+    lp[:n] = l_keys_f32
+    fn = _jit_for(
+        ("join_probe", build.d, build.ml, nb),
+        lambda: _make_join_probe(build.mesh, build.ml, nb),
+    )
+    hitc, gid = fn(build.keys_sorted, build.ids_sorted, jnp.asarray(lp))
+    _count("join_probe")
+    hitc = np.asarray(hitc)[:n]
+    gid = np.asarray(gid)[:n]
+    if (hitc > 1).any():
+        raise ValueError("join: right-side keys must be unique (dim-table join)")
+    return np.maximum(gid, 0).astype(np.intp), hitc == 1
+
+
+# --------------------------------------------------------------------------- #
+# seed API (kept): the original dry-run formulations                           #
+# --------------------------------------------------------------------------- #
 
 
 def masked_stats_local(x: jnp.ndarray, mask: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:

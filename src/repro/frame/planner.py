@@ -83,13 +83,33 @@ COLD_START_PRIORS: Dict[Tuple[str, str], Tuple[float, float]] = {
     ("fused:filter|describe", "xla"): (2.0e-8, _XLA_DISPATCH_OVERHEAD_S),
     ("fused:filter|groupby_agg", "xla"): (5.3e-8, _XLA_DISPATCH_OVERHEAD_S),
     ("fused:filter|sort_values:topk", "xla"): (1.6e-8, _XLA_DISPATCH_OVERHEAD_S),
+    # sharded (data-mesh) collective dispatch: one shard_map covering every
+    # partition, combine in-jit.  Per-row compute matches the xla kernels it
+    # wraps; the intercept is the collective-dispatch floor (larger than one
+    # xla dispatch, amortised against P of them).  Two-point fit from the
+    # committed BENCH_dist.json run (``prior_fit``: 8 emulated devices,
+    # 250k×32 and 1M×128), intercepts floored at 1 ms — the cold collective
+    # dispatch never beats that, and an optimistic intercept would engage
+    # sharding on tables small enough for it to lose.
+    ("describe", "sharded"): (1.51e-8, 1.0e-3),
+    ("groupby_agg", "sharded"): (8.77e-8, 1.13e-2),
+    ("value_counts", "sharded"): (5.91e-8, 5.66e-3),
+    ("sort_values:topk", "sharded"): (1.75e-8, 1.0e-3),
+    # join's sharded entry is deliberately *worse* than the numpy probe: the
+    # bench verdict is that the partition-parallel path is a capability
+    # (right sides too big to broadcast, size/mode-gated in backend.py), not
+    # a per-dispatch cost win, so cost-based selection must never force it
+    ("join", "sharded"): (1.35e-7, 2.5e-3),
 }
 
-# The keys the planner governs.  Join is deliberately absent: its dominant
-# cost is the cached broadcast build amortised across re-probes, which a
-# per-dispatch affine estimate misrepresents — demoting a join on its first
-# dispatch would throw away the build that makes every later probe cheap.
-# Joins stay on the precedence chain.
+# The keys the planner governs.  Join used to be deliberately absent (its
+# dominant cost is the cached broadcast build amortised across re-probes,
+# which a per-dispatch affine estimate misrepresents) — but the sharded
+# partition-parallel build has to compete on estimated cost like every other
+# op, so join is planned now: the committed priors keep the *probe* on the
+# host path (the bench verdict — numpy beats the xla probe per dispatch),
+# while ``choose_sharded`` weighs the collective probe for right sides
+# above the broadcast threshold.
 PLANNED_KEYS = frozenset(
     {
         "describe",
@@ -98,6 +118,7 @@ PLANNED_KEYS = frozenset(
         "sort_values:full",
         "sort_values:topk",
         "filter",
+        "join",
     }
 )
 
@@ -211,6 +232,48 @@ class Planner:
             return "numpy"
         self.cost_model.note_planner_decision(key, default, "estimated")
         return default
+
+    # --------------------------------------------------------------- sharded --
+    def choose_sharded(
+        self, key: str, backend: str, total_rows: float, n_dispatches: int
+    ) -> bool:
+        """Run this node as ONE sharded collective dispatch instead of
+        ``n_dispatches`` per-partition dispatches on ``backend``?
+
+        The host side is costed honestly: ``n_dispatches`` affine estimates
+        (each paying the dispatch-overhead intercept — exactly the term one
+        collective dispatch amortises) at the cheaper of the kernel backend
+        and numpy.  Declines without an estimate on either side — sharded
+        dispatch is chosen, never forced."""
+        if not self.enabled or key not in PLANNED_KEYS:
+            return False
+        if not self._available(key, "sharded"):
+            self.cost_model.note_planner_decision(key, "sharded", "breaker_open")
+            return False
+        est_sharded = self.estimate(key, "sharded", total_rows)
+        if est_sharded is None:
+            self.cost_model.note_planner_decision(key, "sharded", "no_estimate")
+            return False
+        n = max(int(n_dispatches), 1)
+        rows_per = float(total_rows) / n
+        host_cands = []
+        for bk in (backend, "numpy"):
+            if bk != "numpy" and not self._available(key, bk):
+                continue
+            per = self.cost_model.estimate_dispatches(key, bk, rows_per, n)
+            if per is None:
+                one = self.estimate(key, bk, rows_per)
+                per = one * n if one is not None else None
+            if per is not None:
+                host_cands.append(per)
+        if not host_cands:
+            self.cost_model.note_planner_decision(key, backend, "no_estimate")
+            return False
+        if est_sharded < min(host_cands):
+            self.cost_model.note_planner_decision(key, "sharded", "estimated")
+            return True
+        self.cost_model.note_planner_decision(key, backend, "estimated")
+        return False
 
     # ---------------------------------------------------------------- fusion --
     def choose_fusion(

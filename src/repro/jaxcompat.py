@@ -75,11 +75,22 @@ def set_mesh(mesh):
     return _null_mesh_ctx(mesh)
 
 
-def shard_map(f, *, mesh, in_specs, out_specs):
-    """Top-level ``jax.shard_map`` where it exists, else the experimental one."""
-    fn = getattr(jax, "shard_map", None)
-    if fn is not None:
-        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
-    from jax.experimental.shard_map import shard_map as exp_shard_map
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep: Optional[bool] = None):
+    """Top-level ``jax.shard_map`` where it exists, else the experimental one.
 
-    return exp_shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    ``check_rep=False`` disables the static replication checker (needed by
+    shard functions whose replicated outputs come from computing on
+    all-gathered operands — the checker can't see through that); releases
+    that dropped the kwarg just run with the check on."""
+    kwargs = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as exp_shard_map
+
+        fn = exp_shard_map
+    if check_rep is not None:
+        try:
+            return fn(f, check_rep=check_rep, **kwargs)
+        except TypeError:
+            pass
+    return fn(f, **kwargs)

@@ -910,3 +910,13 @@ def topk_masked_padded(x, keep, k: int, largest: bool = True) -> jnp.ndarray:
     if backend() == "xla":
         return _topk_masked_xla(xp, kp, k, largest)
     return topk(jnp.where(kp, xp, sentinel), k, largest=largest)
+
+
+# Shard-local reuse (frame/dist.py): the per-partition tiled bodies double as
+# the per-shard kernels inside one shard_map dispatch — sharded combines stay
+# bit-identical to the host path only because the *same* traced scan produces
+# the per-partition raws on both sides.
+stats_row_tiled = _stats_row_tiled
+segment_batch_body = _segment_batch_body
+topk_body = _topk_body
+TILE = _TILE

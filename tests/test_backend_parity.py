@@ -398,11 +398,15 @@ def test_end_to_end_session_parity(catalog, backend):
 
 def test_join_units_feed_calibration(catalog):
     """Join partials record per-backend samples like every other blocking op,
-    so calibrate() can fit a unit cost for the probe path."""
+    so calibrate() can fit a unit cost for the probe path.  Join is planned
+    now, and the cold priors route the probe to numpy (the committed bench
+    verdict), so pin xla with a global override — which bypasses the planner
+    by design — to exercise the kernel probe's sample path."""
     s = Session(catalog=catalog, mode="sim", kernel_backend="xla")
     df = s.read_table("small")
     dim = s.read_table("dim")
-    s.show(df.join(dim, on="j"))
+    with BK.use_backend("xla"):
+        s.show(df.join(dim, on="j"))
     cm = s.engine.cost_model
     assert ("join", "xla") in cm.samples()
     fitted = cm.calibrate()

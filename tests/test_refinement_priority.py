@@ -1,0 +1,235 @@
+"""Scheduler-aware progressive refinement (frame/blocking.py unit_priority +
+core/progressive.py refinement_order).
+
+The refinement loop used to walk missing partitions in pure bit-reversal
+lattice order; now the running combine can vote: ``unit_priority`` ranks the
+missing partitions by expected shrink of the widest live confidence interval,
+and ``ProgressiveResult.refinement_order`` degrades to the lattice whenever
+the combine has no estimator, raises, or returns a non-permutation.  Exact
+completion must never depend on the ordering.
+"""
+import numpy as np
+import pytest
+
+from repro.core.progressive import ProgressiveResult
+from repro.core.scheduler import sample_first_order
+from repro.frame import Catalog, ColSpec, Session, TableSpec
+from repro.frame import blocking as B
+from repro.frame.blocking import (
+    RunningGroupby,
+    RunningStats,
+    RunningValueCounts,
+    _ci_priority_order,
+)
+from repro.frame.partitioner import uniform_partitions
+from repro.frame.table import from_pydict, pydict_equal
+
+
+# --------------------------------------------------------------------------- #
+# _ci_priority_order                                                           #
+# --------------------------------------------------------------------------- #
+
+
+def test_ci_priority_empty_contrib_declines():
+    assert _ci_priority_order([1, 2, 3], 8, {}) is None
+
+
+def test_ci_priority_is_permutation():
+    order = _ci_priority_order([2, 4, 9, 11, 20], 32, {3: 100.0, 10: 1.0})
+    assert sorted(order) == [2, 4, 9, 11, 20]
+
+
+def test_ci_priority_prefers_neighbours_of_heavy_contributor():
+    # partition 3 carries the mass: its neighbours 2 and 4 outrank the
+    # neighbours of the light contributor at 10, which outrank far partition 20
+    order = _ci_priority_order([2, 4, 9, 11, 20], 32, {3: 100.0, 10: 1.0})
+    assert set(order[:2]) == {2, 4}
+    assert order[-1] == 20
+
+
+def test_ci_priority_distance_decay():
+    order = _ci_priority_order([1, 2, 3], 8, {0: 5.0})
+    assert order == [1, 2, 3]
+
+
+def test_ci_priority_flat_contrib_ties_fall_back_to_lattice():
+    missing = list(range(8))
+    # one contributor, equidistant pairs tie -> lattice rank decides inside ties
+    order = _ci_priority_order(missing, 8, {4: 1.0})
+    assert sorted(order) == missing
+    assert order[0] == 4 - 1 or order[0] == 4 + 1 or order[0] == 4  # nearest first
+
+
+# --------------------------------------------------------------------------- #
+# RunningValueCounts.unit_priority                                             #
+# --------------------------------------------------------------------------- #
+
+
+def _vc_partial(counts):
+    vals = np.arange(len(counts))
+    return vals, np.asarray(counts, np.int64)
+
+
+def test_vc_priority_needs_two_partials():
+    rc = RunningValueCounts(8, "k", None)
+    assert rc.unit_priority([1, 2], 8) is None
+    rc.update(0, _vc_partial([10, 10]))
+    assert rc.unit_priority([1, 2], 8) is None
+
+
+def test_vc_priority_targets_highest_variance_value():
+    rc = RunningValueCounts(8, "k", None)
+    # value 0 is flat (20, 20); value 1 swings (5, 90) -> widest CI is value 1
+    # and partition 6 carries its mass, so 5 and 7 lead the refinement
+    rc.update(0, _vc_partial([20, 5]))
+    rc.update(6, _vc_partial([20, 90]))
+    order = rc.unit_priority([1, 2, 3, 4, 5, 7], 8)
+    assert sorted(order) == [1, 2, 3, 4, 5, 7]
+    assert set(order[:2]) == {5, 7}
+
+
+# --------------------------------------------------------------------------- #
+# RunningGroupby.unit_priority                                                 #
+# --------------------------------------------------------------------------- #
+
+
+def _gb_state(aggs, nparts=8, seen=(0, 5)):
+    rng = np.random.default_rng(2)
+    cats = np.array(["a", "b", "c"])
+    t = from_pydict(
+        {
+            "k": cats[rng.integers(0, 3, 4000)],
+            "x": rng.uniform(0.0, 10.0, 4000),
+        },
+        npartitions=nparts,
+    )
+    rg = RunningGroupby(nparts, "k", aggs, t.partitions[0].columns["k"].dictionary)
+    for i in seen:
+        rg.update(i, B.partial_groupby(t.partitions[i], "k", aggs))
+    return rg
+
+
+def test_gb_priority_needs_two_partials():
+    rg = _gb_state((("x", "x", "sum"),), seen=(0,))
+    assert rg.unit_priority([1, 2, 3], 8) is None
+
+
+@pytest.mark.parametrize("fn", ["sum", "count", "mean"])
+def test_gb_priority_is_permutation(fn):
+    rg = _gb_state((("x", "x", fn),))
+    missing = [1, 2, 3, 4, 6, 7]
+    order = rg.unit_priority(missing, 8)
+    assert order is not None and sorted(order) == missing
+
+
+def test_gb_priority_nonadditive_aggs_decline():
+    rg = _gb_state((("x", "x", "min"), ("x2", "x", "max")))
+    assert rg.unit_priority([1, 2, 3], 8) is None
+
+
+# --------------------------------------------------------------------------- #
+# ProgressiveResult.refinement_order fallbacks                                 #
+# --------------------------------------------------------------------------- #
+
+
+def _pr(combine, total=16):
+    return ProgressiveResult(
+        engine=None, node=None, inputs=[], combine=combine, total_units=total
+    )
+
+
+def test_refinement_order_stats_falls_back_to_lattice():
+    # RunningStats has no unit_priority: pure sample-first order
+    pr = _pr(RunningStats(16))
+    missing = list(range(16))
+    assert pr.refinement_order(missing) == sample_first_order(missing, 16)
+
+
+def test_refinement_order_no_combine_falls_back():
+    pr = _pr(None)
+    missing = [3, 7, 11]
+    assert pr.refinement_order(missing) == sample_first_order(missing, 16)
+
+
+def test_refinement_order_estimator_failure_falls_back():
+    class Broken:
+        def unit_priority(self, missing, total):
+            raise RuntimeError("boom")
+
+    missing = list(range(8))
+    assert _pr(Broken()).refinement_order(missing) == sample_first_order(
+        missing, 16
+    )
+
+
+def test_refinement_order_non_permutation_falls_back():
+    class Wrong:
+        def unit_priority(self, missing, total):
+            return missing[:-1]  # drops a partition
+
+    missing = [1, 2, 3, 4]
+    assert _pr(Wrong()).refinement_order(missing) == sample_first_order(
+        missing, 16
+    )
+
+
+def test_refinement_order_valid_priority_is_used():
+    class Reversed:
+        def unit_priority(self, missing, total):
+            return sorted(missing, reverse=True)
+
+    missing = [1, 2, 3, 4]
+    assert _pr(Reversed()).refinement_order(missing) == [4, 3, 2, 1]
+
+
+# --------------------------------------------------------------------------- #
+# end to end: priority-ordered refinement still completes exactly              #
+# --------------------------------------------------------------------------- #
+
+
+def _catalog(nrows=40_000):
+    cat = Catalog()
+    cat.register(
+        TableSpec(
+            "fact",
+            nrows=nrows,
+            cols=(
+                ColSpec("x", low=0.0, high=10.0),
+                ColSpec("k", kind="cat", n_categories=8),
+            ),
+            io_seconds=2.0,
+            seed=7,
+        )
+    )
+    return cat
+
+
+def _frame(session, nparts):
+    df = session.read_table("fact")
+    spec = session.catalog.spec("fact")
+    df.node.kwargs["partition_bounds"] = uniform_partitions(spec.nrows, nparts)
+    return df
+
+
+@pytest.mark.parametrize(
+    "build",
+    [
+        lambda df: df["k"].value_counts(),
+        lambda df: df.groupby("k").agg({"x": "mean"}),
+    ],
+    ids=["value_counts", "groupby"],
+)
+def test_priority_refinement_completes_bit_for_bit(build):
+    cat = _catalog()
+    s = Session(catalog=cat, mode="sim")
+    pr = s.interact(build(_frame(s, 16)), progressive=True)
+    covs = [pr.estimate().coverage]
+    while True:
+        est = pr.refine(3)
+        covs.append(est.coverage)
+        if est.exact:
+            break
+    assert covs == sorted(covs)  # refinement only adds coverage
+    s2 = Session(catalog=_catalog(), mode="sim")
+    exact = s2.interact(build(_frame(s2, 16)))
+    assert pydict_equal(est.value.to_pydict(), exact.to_pydict())
